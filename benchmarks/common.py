@@ -1,0 +1,30 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import contextlib
+import json
+import pathlib
+import time
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+@contextlib.contextmanager
+def timed():
+    t = {}
+    t0 = time.perf_counter()
+    yield t
+    t["s"] = time.perf_counter() - t0
+
+
+def save_json(name: str, payload) -> pathlib.Path:
+    out = ARTIFACTS / "benchmarks"
+    out.mkdir(parents=True, exist_ok=True)
+    p = out / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2, default=float))
+    return p

@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: µs/call of the jnp reference paths on CPU (the
+Pallas kernels target TPU; interpret-mode timing is not meaningful), plus an
+analytic MXU-roofline estimate of the kernel's TPU-side time."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_linear.ref import fused_linear_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+PEAK = 197e12
+
+
+def _bench(fn, *args, iters: int = 5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(fast: bool = True):
+    k = jax.random.PRNGKey(0)
+    # flash attention: B=2 H=8 S=1024 D=128
+    b, h, s, d = 2, 8, 1024, 128
+    q, kk, v = (jax.random.normal(jax.random.fold_in(k, i), (b, h, s, d),
+                                  jnp.float32) for i in range(3))
+    f = jax.jit(lambda a, b_, c: attention_ref(a, b_, c, causal=True))
+    us = _bench(f, q, kk, v)
+    flops = 4 * b * h * s * s * d / 2
+    emit("kernel_flash_attention_ref", us, f"tpu_roofline_us={flops/PEAK*1e6:.1f}")
+
+    # ssd scan: B=2 S=512 n=8 p=64 ds=64
+    b2, s2, n, p, ds = 2, 512, 8, 64, 64
+    xh = jax.random.normal(k, (b2, s2, n, p))
+    dt = jax.nn.softplus(jax.random.normal(k, (b2, s2, n))) * 0.5
+    a_log = jax.random.normal(k, (n,)) * 0.3
+    bs = jax.random.normal(k, (b2, s2, ds)) * 0.5
+    cs = jax.random.normal(k, (b2, s2, ds)) * 0.5
+    f2 = jax.jit(ssd_ref)
+    us = _bench(f2, xh, dt, a_log, bs, cs)
+    q_chunk = 128
+    flops2 = b2 * s2 * n * (2 * q_chunk * p + 4 * ds * p)
+    emit("kernel_ssd_scan_ref", us, f"tpu_roofline_us={flops2/PEAK*1e6:.1f}")
+
+    # fused linear: 1024x1024x1024
+    m = 1024
+    x = jax.random.normal(k, (m, m))
+    w = jax.random.normal(k, (m, m)) / 32
+    bvec = jnp.zeros((m,))
+    f3 = jax.jit(lambda a, b_, c: fused_linear_ref(a, b_, c, "relu"))
+    us = _bench(f3, x, w, bvec)
+    emit("kernel_fused_linear_ref", us, f"tpu_roofline_us={2*m**3/PEAK*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

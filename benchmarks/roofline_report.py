@@ -1,0 +1,58 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the per-
+(arch x shape x mesh) table consumed by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import ARTIFACTS, emit, save_json
+
+DRYRUN = ARTIFACTS / "dryrun"
+
+
+def load_all():
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def to_markdown(rows, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+        "useful frac | HBM/dev (GiB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        ro, m = r["roofline"], r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute_s']:.2e} | "
+            f"{ro['t_memory_s']:.2e} | {ro['t_collective_s']:.2e} | "
+            f"{ro['bottleneck']} | {r['useful_flops_frac']:.2f} | "
+            f"{m['peak_bytes']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def main(fast: bool = True):
+    rows = load_all()
+    if not rows:
+        emit("roofline_table", 0.0, "no dryrun artifacts yet")
+        return
+    n1 = sum(r["mesh"] == "16x16" for r in rows)
+    n2 = sum(r["mesh"] == "2x16x16" for r in rows)
+    bounds = {}
+    for r in rows:
+        if r["mesh"] == "16x16":
+            bounds[r["roofline"]["bottleneck"]] = bounds.get(
+                r["roofline"]["bottleneck"], 0) + 1
+    save_json("roofline_rows", rows)
+    (ARTIFACTS / "roofline_16x16.md").write_text(to_markdown(rows))
+    (ARTIFACTS / "roofline_2x16x16.md").write_text(to_markdown(rows, "2x16x16"))
+    emit("roofline_table", 0.0,
+         f"1pod={n1}/40;2pod={n2}/40;bounds={bounds}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness: one entry per paper table/figure + roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable detail).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = [
+    ("table2_costmodel", "Table II layer-level FLOPs model vs XLA"),
+    ("kernel_bench", "Pallas-kernel reference micro-benchmarks"),
+    ("theorem2_tradeoff", "Theorem 2 [O(1/V), O(sqrt V)] trade-off"),
+    ("fig2_participation", "Fig 2 derived vs experimental participation"),
+    ("fig456_schedulers", "Figs 4-6 DDSRA vs baselines"),
+    ("roofline_report", "Roofline table from dry-run artifacts"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size runs (slower, closer to paper scale)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for mod_name, desc in BENCHES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"# {mod_name}: {desc}", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main(fast=not args.full)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(mod_name)
+    if failures:
+        print(f"FAILED: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

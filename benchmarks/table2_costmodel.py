@@ -1,0 +1,53 @@
+"""Paper Table II: the layer-level FLOPs model vs XLA's measured cost.
+
+For each VGG-11 layer we jit the isolated forward (and backward) and compare
+``cost_analysis()['flops']`` against the closed-form o_l / o_l'. Claim:
+the conv/fc forward formulas match XLA within ~2x (the table's intent is
+relative sizing for the partition optimizer, not ns-level accuracy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.core import costmodel as cm
+from repro.models import vgg
+
+
+def run(width_mult: float = 0.5, batch: int = 16):
+    plan, params = vgg.init_vgg11(jax.random.PRNGKey(0), width_mult)
+    layers = cm.vgg11_layers(width_mult)
+    x = jnp.zeros((batch, 32, 32, 3))
+    rows = []
+    for i, (kind, lc) in enumerate(zip(plan, layers)):
+        fwd = jax.jit(lambda p, xx, i=i: vgg.forward_range(plan, p, xx, i, i + 1))
+        compiled = fwd.lower(params, x).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        measured = float(ca.get("flops", 0.0))
+        predicted = lc.flops_fwd * batch
+        rows.append({"layer": lc.name, "kind": lc.kind,
+                     "predicted_fwd": predicted, "measured_fwd": measured,
+                     "ratio": measured / max(predicted, 1.0)})
+        x = fwd(params, x)
+    return rows
+
+
+def main(fast: bool = True):
+    with timed() as t:
+        rows = run(width_mult=0.25 if fast else 1.0)
+    save_json("table2_costmodel", rows)
+    conv_fc = [r for r in rows if r["kind"] in ("conv", "fc")]
+    ratios = np.array([r["ratio"] for r in conv_fc])
+    emit("table2_flops_model", t["s"] * 1e6,
+         f"median_ratio={np.median(ratios):.2f};n={len(rows)}")
+    for r in rows:
+        print(f"  {r['layer']:8s} {r['kind']:5s} predicted {r['predicted_fwd']:.3e} "
+              f"measured {r['measured_fwd']:.3e} ratio {r['ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

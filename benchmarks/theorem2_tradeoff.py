@@ -1,0 +1,64 @@
+"""Theorem 2: the [O(1/V), O(sqrt(V))] trade-off.
+
+Sweep the Lyapunov control parameter V; measure (a) average per-round delay
+and (b) participation-rate constraint violation (queue stability gap).
+Claim: delay decreases (to a floor) as V grows; the participation gap grows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.core.ddsra import Workload, ddsra_round
+from repro.core import costmodel as cm
+from repro.core.network import Network, NetworkConfig
+from repro.core.participation import participation_rates
+
+
+def run(v_values=(0.01, 1.0, 100.0, 10000.0), rounds: int = 150, seed: int = 0):
+    # wide distance heterogeneity + a comms-dominated workload (MLP) so that
+    # picking low-delay gateways and honouring participation targets
+    # genuinely conflict: delay then scales ~d^2 across gateways
+    net = Network(NetworkConfig(dist_range=(300.0, 4000.0)),
+                  np.random.default_rng(seed))
+    from repro.models.vgg import mlp_layer_costs
+    layers = mlp_layer_costs((3072, 512, 512, 10))
+    o, g = cm.flops_vector(layers), cm.mem_vector(layers, batch=50)
+    rng = np.random.default_rng(seed)
+    d_tilde = np.maximum((rng.uniform(0, 2000, net.cfg.n_devices) * 0.05).astype(int), 4)
+    w = Workload(o, g, cm.model_size_bytes(layers), 5, d_tilde.astype(float))
+    # uneven targets so the constraint binds
+    gamma = participation_rates(rng.uniform(0.3, 3.0, net.cfg.n_gateways),
+                                net.cfg.n_channels)
+    out = {"gamma": gamma.tolist(), "sweep": []}
+    for v in v_values:
+        q = np.zeros(net.cfg.n_gateways)
+        taus, hist = [], []
+        for t in range(rounds):
+            dec = ddsra_round(w, net, net.draw(), q, gamma, v)
+            q = dec.queues
+            taus.append(dec.delay if np.isfinite(dec.delay) else np.nan)
+            hist.append(dec.selected)
+        rate = np.mean(hist, axis=0)
+        gap = float(np.maximum(gamma - rate, 0).max())
+        out["sweep"].append({"v": v, "mean_delay": float(np.nanmean(taus)),
+                             "participation_gap": gap,
+                             "rates": rate.tolist()})
+    return out
+
+
+def main(fast: bool = True):
+    with timed() as t:
+        res = run(rounds=60 if fast else 300)
+    save_json("theorem2_tradeoff", res)
+    d = [s["mean_delay"] for s in res["sweep"]]
+    g = [s["participation_gap"] for s in res["sweep"]]
+    emit("theorem2_V_tradeoff", t["s"] * 1e6,
+         f"delay:{d[0]:.2f}->{d[-1]:.2f};gap:{g[0]:.3f}->{g[-1]:.3f}")
+    for s in res["sweep"]:
+        print(f"  V={s['v']:<8g} delay {s['mean_delay']:7.2f}s  "
+              f"gap {s['participation_gap']:.3f}  rates {np.round(s['rates'], 2)}")
+
+
+if __name__ == "__main__":
+    main()

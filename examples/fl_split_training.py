@@ -1,0 +1,48 @@
+"""End-to-end driver: DDSRA-scheduled federated training of VGG-11 on
+synthetic non-IID data, comparing against a baseline scheduler — the
+paper's headline experiment (Figs. 4-5) at reduced scale.
+
+    PYTHONPATH=src python examples/fl_split_training.py [--rounds 40] [--vgg]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.fl import FLConfig, FLTrainer
+from repro.models import vgg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--vgg", action="store_true",
+                    help="use VGG-11 (slower) instead of the MLP")
+    ap.add_argument("--v", type=float, default=0.01,
+                    help="Lyapunov trade-off parameter V")
+    args = ap.parse_args()
+
+    cfg = FLConfig(model="vgg" if args.vgg else "mlp",
+                   width_mult=0.125, rounds=args.rounds, v=args.v,
+                   eval_every=max(args.rounds // 6, 1), seed=0)
+    tr = FLTrainer(cfg)
+    key = jax.random.PRNGKey(0)
+    if args.vgg:
+        fresh = lambda: vgg.init_vgg11(key, cfg.width_mult, cfg.classes)[1]
+    else:
+        fresh = lambda: vgg.init_mlp(key, (3072, 128, 64, cfg.classes))[1]
+
+    print(f"participation targets: {np.round(tr.gamma, 2)}")
+    for sched in ("ddsra", "round_robin"):
+        tr.bs.params = fresh()
+        tr.rng = np.random.default_rng(1)
+        res = tr.run(sched)
+        print(f"\n[{sched}]")
+        for r, a in zip(res.acc_rounds, res.accuracy):
+            print(f"  round {r:3d}: accuracy {a:.3f}")
+        print(f"  cumulative delay {res.cum_delay[-1]:.1f}s, "
+              f"failures {res.failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Serve a small model with batched requests: KV-cache decode for a dense
+arch and recurrent-state decode for the SSM arch, via the same serve_step.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+for arch in ("deepseek-7b", "mamba2-2.7b", "jamba-v0.1-52b"):
+    serve(arch, smoke=True, batch=4, prompt_len=16, gen=16)

@@ -1,0 +1,64 @@
+"""Numpy-backed pytree checkpointing (no external deps).
+
+Flattens a pytree to path-keyed arrays in a single ``.npz`` plus a JSON
+treedef manifest; restores exactly, including dtypes (bf16 stored as uint16
+views since numpy lacks bfloat16).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paths_and_leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(path, tree, step: Optional[int] = None) -> pathlib.Path:
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    fname = path / (f"step_{step:08d}.npz" if step is not None else "ckpt.npz")
+    arrays = {}
+    meta = {}
+    for key, leaf in _paths_and_leaves(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            meta[key] = "bfloat16"
+            arr = arr.view(np.uint16)
+        arrays[key] = arr
+    np.savez(fname, **arrays)
+    (fname.with_suffix(".json")).write_text(json.dumps(meta))
+    return fname
+
+
+def load_pytree(fname, like) -> Any:
+    fname = pathlib.Path(fname)
+    data = np.load(fname)
+    meta = json.loads(fname.with_suffix(".json").read_text())
+    leaves = []
+    for key, leaf in _paths_and_leaves(like):
+        arr = data[key]
+        if meta.get(key) == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(jax.tree.structure(like), leaves)
+
+
+def latest_step(path) -> Optional[int]:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    steps = [int(m.group(1)) for f in path.glob("step_*.npz")
+             if (m := re.match(r"step_(\d+)\.npz", f.name))]
+    return max(steps) if steps else None

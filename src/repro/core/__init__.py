@@ -1,0 +1,7 @@
+"""The paper's primary contribution: layer-level cost model, device-specific
+participation rate, and the DDSRA Lyapunov scheduler (+ baselines)."""
+from repro.core import costmodel, ddsra, hungarian, lyapunov, network
+from repro.core import participation, partition, schedulers
+
+__all__ = ["costmodel", "ddsra", "hungarian", "lyapunov", "network",
+           "participation", "partition", "schedulers"]

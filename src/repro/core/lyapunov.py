@@ -1,0 +1,25 @@
+"""Lyapunov virtual queues and drift-plus-penalty (paper Sec. V-A)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def update_queues(q: np.ndarray, selected: np.ndarray, gamma: np.ndarray) -> np.ndarray:
+    """Eq. (14): Q_m(t+1) = max(Q_m(t) - 1_m^t + Gamma_m, 0)."""
+    return np.maximum(q - selected.astype(float) + gamma, 0.0)
+
+
+def drift_plus_penalty(v: float, tau: float, q: np.ndarray,
+                       selected: np.ndarray) -> float:
+    """Objective of P2 (Eq. 17): V*tau - sum_m Q_m * 1_m."""
+    return v * tau - float(np.sum(q * selected))
+
+
+def queue_stability_gap(history: np.ndarray, gamma: np.ndarray) -> np.ndarray:
+    """Empirical participation-rate shortfall after T rounds.
+
+    history: (T, M) 0/1 selections. Returns Gamma_m - (1/T) sum_t 1_m^t
+    (positive = constraint C11 violated so far).
+    """
+    rate = history.mean(axis=0)
+    return gamma - rate

@@ -1,0 +1,3 @@
+from repro.data.lm import LMStream, markov_stream
+
+__all__ = ["LMStream", "markov_stream"]

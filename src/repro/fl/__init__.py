@@ -1,0 +1,5 @@
+from repro.fl.data import FLDataset, make_fl_dataset, sample_batch
+from repro.fl.trainer import FLConfig, FLResult, FLTrainer
+
+__all__ = ["FLDataset", "make_fl_dataset", "sample_batch",
+           "FLConfig", "FLResult", "FLTrainer"]

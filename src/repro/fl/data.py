@@ -1,0 +1,78 @@
+"""Synthetic SVHN/CIFAR-like non-IID data pipeline.
+
+Container is offline, so we synthesize a 10-class 32x32x3 task whose class
+structure is learnable by VGG/MLP: each class has a smooth random template;
+samples are template + noise + random brightness. Non-IID partitioning
+follows the paper/[50]: device n holds data points from ``q`` classes only
+("q_m-class non-IID"), with non-IID degree ``chi`` (proportion of q-class
+points; the rest is IID spillover).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FLDataset:
+    x_dev: List[np.ndarray]     # per-device images (D_n, 32, 32, 3)
+    y_dev: List[np.ndarray]
+    x_test: np.ndarray
+    y_test: np.ndarray
+    classes_of: List[np.ndarray]
+
+
+def _class_templates(rng: np.random.Generator, classes: int, size: int = 32):
+    """Smooth random template per class (low-freq Fourier pattern)."""
+    t = []
+    coords = np.linspace(0, 2 * np.pi, size)
+    xx, yy = np.meshgrid(coords, coords)
+    for _ in range(classes):
+        img = np.zeros((size, size, 3))
+        for c in range(3):
+            for _ in range(4):
+                fx, fy = rng.integers(1, 4, 2)
+                ph = rng.uniform(0, 2 * np.pi, 2)
+                img[:, :, c] += rng.normal() * np.sin(fx * xx + ph[0]) * np.cos(fy * yy + ph[1])
+        t.append(img / np.abs(img).max())
+    return np.stack(t)
+
+
+def _sample(rng, templates, cls: np.ndarray, noise: float = 0.35):
+    base = templates[cls]
+    jitter = rng.normal(0, noise, base.shape)
+    bright = rng.uniform(0.7, 1.3, (len(cls), 1, 1, 1))
+    return (base * bright + jitter).astype(np.float32)
+
+
+def make_fl_dataset(n_devices: int, sizes: np.ndarray, q_classes: np.ndarray,
+                    chi: float = 1.0, classes: int = 10, test_size: int = 1000,
+                    seed: int = 0) -> FLDataset:
+    """sizes: (N,) local dataset sizes D_n; q_classes: (N,) classes per device."""
+    rng = np.random.default_rng(seed)
+    templates = _class_templates(rng, classes)
+    x_dev, y_dev, cls_of = [], [], []
+    for n in range(n_devices):
+        own = rng.choice(classes, size=min(int(q_classes[n]), classes), replace=False)
+        cls_of.append(own)
+        d = int(sizes[n])
+        n_noniid = int(round(chi * d))
+        y = np.concatenate([
+            rng.choice(own, size=n_noniid),
+            rng.integers(0, classes, size=d - n_noniid),
+        ]).astype(np.int32)
+        rng.shuffle(y)
+        x_dev.append(_sample(rng, templates, y))
+        y_dev.append(y)
+    y_test = np.tile(np.arange(classes), test_size // classes).astype(np.int32)
+    x_test = _sample(rng, templates, y_test)
+    return FLDataset(x_dev, y_dev, x_test, y_test, cls_of)
+
+
+def sample_batch(rng: np.random.Generator, ds: FLDataset, n: int,
+                 batch: int) -> Tuple[np.ndarray, np.ndarray]:
+    idx = rng.choice(len(ds.y_dev[n]), size=min(batch, len(ds.y_dev[n])),
+                     replace=False)
+    return ds.x_dev[n][idx], ds.y_dev[n][idx]

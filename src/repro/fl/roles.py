@@ -1,0 +1,76 @@
+"""The three tiers of the paper's framework as explicit roles.
+
+``Device`` owns a private shard and the bottom layers; ``Gateway`` trains the
+offloaded top layers, combines halves and aggregates its shop floor;
+``BaseStation`` aggregates globally and runs the scheduler. Heavy numerics
+run in jitted JAX (repro.fl.split); these classes own state + data flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.fl import split as split_lib
+from repro.fl.data import FLDataset, sample_batch
+from repro.models.vgg import Params, Plan
+
+
+@dataclasses.dataclass
+class Device:
+    idx: int
+    gateway: int
+    d_size: int           # |D_n|
+    d_tilde: int          # training batch size
+
+    def local_round(self, plan: Plan, global_params: Params, ds: FLDataset,
+                    l_split: int, k_iters: int, lr: float,
+                    rng: np.random.Generator):
+        """One device's local training at partition point l (with its
+        gateway co-executing the top layers)."""
+        x, y = sample_batch(rng, ds, self.idx, self.d_tilde)
+        return split_lib.local_train(plan, global_params, x, y, l_split,
+                                     k_iters, lr)
+
+
+@dataclasses.dataclass
+class Gateway:
+    idx: int
+    devices: List[Device]
+
+    def shop_floor_round(self, plan: Plan, global_params: Params, ds: FLDataset,
+                         l_splits: np.ndarray, k_iters: int, lr: float,
+                         rng: np.random.Generator):
+        """Run all associated devices, combine halves, FedAvg the shop floor."""
+        results, weights, losses = [], [], []
+        for i, dev in enumerate(self.devices):
+            w_n, loss = dev.local_round(plan, global_params, ds,
+                                        int(l_splits[i]), k_iters, lr, rng)
+            results.append(w_n)
+            weights.append(dev.d_tilde)
+            losses.append(loss)
+        combined = fedavg(results, np.asarray(weights, float))
+        return combined, float(np.mean(losses)), float(np.sum(weights))
+
+
+class BaseStation:
+    def __init__(self, plan: Plan, params: Params):
+        self.plan = plan
+        self.params = params
+
+    def aggregate(self, models: List[Params], weights: np.ndarray):
+        if models:
+            self.params = fedavg(models, np.asarray(weights, float))
+        return self.params
+
+
+def fedavg(models: List[Params], weights: np.ndarray) -> Params:
+    """FedAvg over a list of layer-list params."""
+    import jax
+    w = weights / weights.sum()
+
+    def avg(*leaves):
+        return sum(wi * leaf for wi, leaf in zip(w, leaves))
+
+    return jax.tree.map(avg, *models)

@@ -1,0 +1,77 @@
+"""Split forward/backward across the DNN partition point.
+
+Implements the paper's mechanism exactly (Sec. II-B3): the device runs the
+bottom ``l`` layers forward and ships the boundary activation to the gateway;
+the gateway runs the top layers, computes the loss, backpropagates to the
+boundary and returns the boundary *error*; the device completes backward for
+the bottom layers. Only the boundary activation/error and labels cross the
+tier boundary — never raw inputs or intermediate weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import vgg
+from repro.models.vgg import Params, Plan
+
+
+def device_forward(plan: Plan, bottom: Params, x: jax.Array, l: int):
+    """Bottom-layer forward with a VJP handle kept device-side."""
+    act, vjp = jax.vjp(lambda p: vgg.forward_range(plan, p, x, 0, l), bottom)
+    return act, vjp
+
+
+def gateway_step(plan: Plan, top: Params, act: jax.Array, labels: jax.Array,
+                 l: int):
+    """Top-layer forward+backward. Returns loss, top grads, boundary error."""
+    def loss_of(p, a):
+        logits = vgg.forward_range(plan, [None] * l + p, a, l, len(plan))
+        return vgg.xent_loss(logits, labels)
+
+    loss, (g_top, g_act) = jax.value_and_grad(loss_of, argnums=(0, 1))(top, act)
+    return loss, g_top, g_act
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def split_sgd_step(plan: Plan, params: Params, batch_xy, l: int, lr):
+    """One local iteration of split training at partition point ``l``."""
+    x, labels = batch_xy
+    bottom, top = params[:l], params[l:]
+    act, vjp = device_forward(plan, bottom, x, l)
+    loss, g_top, g_act = gateway_step(plan, top, act, labels, l)
+    (g_bottom,) = vjp(g_act)
+
+    def sgd(p, g):
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+
+    new_params = sgd(bottom, g_bottom) + sgd(top, g_top)
+    return new_params, loss
+
+
+def local_train(plan: Plan, params: Params, x, y, l: int, k_iters: int,
+                lr: float) -> Tuple[Params, float]:
+    """K local epochs over the sampled batch (paper's update rule)."""
+    loss = jnp.inf
+    lr = jnp.float32(lr)
+    for _ in range(k_iters):
+        params, loss = split_sgd_step(plan, params, (x, y), l, lr)
+    return params, float(loss)
+
+
+# --- gradient statistics for the participation-rate estimators -------------
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def flat_grad(plan: Plan, params: Params, x, y) -> jnp.ndarray:
+    def loss_of(p):
+        return vgg.xent_loss(vgg.forward(plan, p, x), y)
+    g = jax.grad(loss_of)(params)
+    return jnp.concatenate([l_.ravel() for l_ in jax.tree.leaves(g)])
+
+
+def flat_params(params) -> jnp.ndarray:
+    return jnp.concatenate([l_.ravel() for l_ in jax.tree.leaves(params)])

@@ -1,0 +1,202 @@
+"""End-to-end FL simulation: scheduler in the loop, real JAX training.
+
+Wires together the network/energy environment (repro.core.network), the
+DDSRA scheduler or a baseline (repro.core.schedulers), the layer-level cost
+model (repro.core.costmodel) and real split training (repro.fl.split) into
+the paper's two-tier FL loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core.ddsra import Workload
+from repro.core.network import Network, NetworkConfig
+from repro.core.participation import (DataStats, divergence_bound,
+                                      participation_rates)
+from repro.core.schedulers import SCHEDULERS, RoundContext
+from repro.fl import split as split_lib
+from repro.fl.data import FLDataset, make_fl_dataset, sample_batch
+from repro.fl.roles import BaseStation, Device, Gateway, fedavg
+from repro.models import vgg
+
+
+@dataclasses.dataclass
+class FLConfig:
+    model: str = "vgg"            # vgg | mlp
+    width_mult: float = 0.25
+    classes: int = 10
+    k_iters: int = 5              # local epochs K
+    lr: float = 0.01              # step size beta
+    alpha: float = 0.05           # training data sampling ratio
+    rounds: int = 50
+    v: float = 0.01               # Lyapunov control parameter
+    scheduler: str = "ddsra"
+    seed: int = 0
+    eval_every: int = 5
+    max_dataset: int = 2000
+    chi: float = 1.0              # non-IID degree
+    sigma_samples: int = 8        # per-sample grads for sigma estimation
+
+
+@dataclasses.dataclass
+class FLResult:
+    accuracy: List[float]
+    acc_rounds: List[int]
+    cum_delay: List[float]
+    participation: np.ndarray     # (T, M)
+    gamma_targets: np.ndarray
+    losses: List[float]
+    phi: np.ndarray
+    failures: int
+
+
+class FLTrainer:
+    def __init__(self, cfg: FLConfig, net_cfg: Optional[NetworkConfig] = None):
+        self.cfg = cfg
+        self.net = Network(net_cfg or NetworkConfig(),
+                           np.random.default_rng(cfg.seed))
+        self.rng = np.random.default_rng(cfg.seed + 1)
+        ncfg = self.net.cfg
+
+        # local dataset sizes D_n ~ U(0, 2000]; training batch D~_n = alpha*D_n
+        self.d_sizes = np.maximum(
+            (self.rng.uniform(0, cfg.max_dataset, ncfg.n_devices)).astype(int), 40)
+        self.d_tilde = np.maximum((cfg.alpha * self.d_sizes).astype(int), 4)
+
+        # non-IID classes: gateway 0's devices see the widest variety
+        # (paper Sec. VII-B: "the 1-th gateway ... a wider variety")
+        q = np.zeros(ncfg.n_devices, dtype=int)
+        for n in range(ncfg.n_devices):
+            gw = self.net.assign[n]
+            q[n] = cfg.classes if gw == 0 else int(self.rng.integers(1, 4))
+        self.ds = make_fl_dataset(ncfg.n_devices, self.d_sizes, q,
+                                  chi=cfg.chi, classes=cfg.classes,
+                                  seed=cfg.seed)
+
+        # model + layer-level costs (paper Table II)
+        key = jax.random.PRNGKey(cfg.seed)
+        if cfg.model == "vgg":
+            self.plan, params = vgg.init_vgg11(key, cfg.width_mult, cfg.classes)
+            self.layers = cm.vgg11_layers(cfg.width_mult, classes=cfg.classes)
+        else:
+            sizes = (3072, 128, 64, cfg.classes)
+            self.plan, params = vgg.init_mlp(key, sizes)
+            self.layers = vgg.mlp_layer_costs(sizes)
+        self.bs = BaseStation(self.plan, params)
+
+        o = cm.flops_vector(self.layers)
+        g = cm.mem_vector(self.layers, batch=int(self.d_tilde.max()))
+        self.workload = Workload(o, g, cm.model_size_bytes(self.layers),
+                                 cfg.k_iters, self.d_tilde.astype(float))
+
+        self.gateways = [
+            Gateway(m, [Device(int(n), m, int(self.d_sizes[n]), int(self.d_tilde[n]))
+                        for n in self.net.devices_of(m)])
+            for m in range(ncfg.n_gateways)]
+
+        self.stats = self.estimate_stats(params)
+        self.phi = divergence_bound(self.stats, self.net.assign,
+                                    cfg.lr, cfg.k_iters)
+        self.gamma = participation_rates(self.phi, ncfg.n_channels)
+
+    # ------------------------------------------------------------------
+    def estimate_stats(self, params) -> DataStats:
+        """Online estimators for sigma_n, delta_n, L_n (paper Sec. VII-A)."""
+        cfg = self.cfg
+        n_dev = self.net.cfg.n_devices
+        grads, sigmas, lips = [], [], []
+        for n in range(n_dev):
+            x, y = sample_batch(self.rng, self.ds, n, self.d_tilde[n])
+            g = np.asarray(split_lib.flat_grad(self.plan, params, x, y))
+            grads.append(g)
+            # sigma: per-sample gradient spread
+            m_s = min(cfg.sigma_samples, len(y))
+            per = [np.asarray(split_lib.flat_grad(self.plan, params,
+                                                  x[i:i + 1], y[i:i + 1]))
+                   for i in range(m_s)]
+            mean_g = np.mean(per, axis=0)
+            sigmas.append(float(np.mean([np.linalg.norm(p - mean_g) for p in per])))
+            # L_n: two-point secant
+            w0 = split_lib.flat_params(params)
+            pert = jax.tree.map(
+                lambda p_, gg: p_ - cfg.lr * gg,
+                params, jax.tree.unflatten(jax.tree.structure(params),
+                                           _unflatten_like(g, params)))
+            g2 = np.asarray(split_lib.flat_grad(self.plan, pert, x, y))
+            w1 = split_lib.flat_params(pert)
+            dw = np.linalg.norm(np.asarray(w1) - np.asarray(w0))
+            lips.append(float(np.linalg.norm(g2 - g) / max(dw, 1e-9)))
+        weights = self.d_sizes / self.d_sizes.sum()
+        global_g = np.sum([w * g for w, g in zip(weights, grads)], axis=0)
+        deltas = [float(np.linalg.norm(g - global_g)) for g in grads]
+        return DataStats(np.asarray(sigmas), np.asarray(deltas),
+                         np.maximum(np.asarray(lips), 0.1),
+                         self.d_tilde.astype(float))
+
+    # ------------------------------------------------------------------
+    def run(self, scheduler_name: Optional[str] = None) -> FLResult:
+        cfg = self.cfg
+        ncfg = self.net.cfg
+        name = scheduler_name or cfg.scheduler
+        sched_cls = SCHEDULERS[name]
+        scheduler = sched_cls() if name != "random" else sched_cls(cfg.seed)
+
+        queues = np.zeros(ncfg.n_gateways)
+        losses = np.full(ncfg.n_gateways, np.log(cfg.classes))
+        acc, acc_rounds, cum_delay, parts, loss_hist = [], [], [], [], []
+        delay_sum, failures = 0.0, 0
+
+        for t in range(cfg.rounds):
+            st = self.net.draw()
+            ctx = RoundContext(t, self.workload, self.net, st, queues,
+                               self.gamma, cfg.v, losses=losses.copy())
+            dec = scheduler.schedule(ctx)
+            queues = dec.queues
+            parts.append(dec.selected.copy())
+
+            models, weights = [], []
+            round_delay = 0.0
+            for m in np.where(dec.selected)[0]:
+                j = int(np.argmax(dec.assignment[m]))
+                sol = dec.solutions.get((int(m), j))
+                if sol is None:
+                    continue
+                if not sol.feasible or not np.isfinite(sol.delay):
+                    failures += 1     # energy/memory violation: round fails
+                    continue
+                round_delay = max(round_delay, sol.delay)
+                combined, gw_loss, w_m = self.gateways[m].shop_floor_round(
+                    self.plan, self.bs.params, self.ds, sol.l_split,
+                    cfg.k_iters, cfg.lr, self.rng)
+                models.append(combined)
+                weights.append(w_m)
+                losses[m] = gw_loss
+            self.bs.aggregate(models, np.asarray(weights))
+            delay_sum += round_delay
+            cum_delay.append(delay_sum)
+            loss_hist.append(float(np.mean(losses)))
+
+            if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
+                acc.append(vgg.accuracy(self.plan, self.bs.params,
+                                        self.ds.x_test, self.ds.y_test))
+                acc_rounds.append(t + 1)
+
+        return FLResult(acc, acc_rounds, cum_delay, np.asarray(parts),
+                        self.gamma, loss_hist, self.phi, failures)
+
+
+def _unflatten_like(flat: np.ndarray, tree):
+    """Split a flat vector back into leaves shaped like ``tree``."""
+    leaves = jax.tree.leaves(tree)
+    out, i = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(np.asarray(flat[i:i + n]).reshape(leaf.shape).astype(leaf.dtype))
+        i += n
+    return out

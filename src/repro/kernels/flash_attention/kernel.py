@@ -1,0 +1,108 @@
+"""Flash attention Pallas TPU kernel (online softmax, VMEM-tiled).
+
+Grid: (batch*heads, num_q_blocks, num_k_blocks); the k axis is innermost and
+sequential on TPU, so the running max / denominator / accumulator live in
+VMEM scratch across k steps (the canonical flash recurrence). Block shapes
+are MXU-aligned (multiples of 128 on the lane dim; block_q/block_k sublane).
+
+Causal + sliding-window masking is applied inside the block; fully-masked
+blocks still execute (grid is static) but contribute nothing — ``ops.py``
+documents the cost model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, scale: float, block_q: int, block_k: int,
+                  causal: bool, window: Optional[int], seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_len
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                              # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                           # (bq, bk)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q, k, v: (B, H, S, D) with equal head counts -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+    grid = (bh, s // block_q, s // block_k)
+
+    kern = functools.partial(
+        _flash_kernel, scale=d ** -0.5, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_len=s)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh_, qi, ki: (bh_, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh_, qi, ki: (bh_, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh_, qi, ki: (bh_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh_, qi, ki: (bh_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the flash-attention kernel (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret", "use_pallas"))
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, causal: bool = True, window: Optional[int] = None,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = False, use_pallas: bool = True) -> jax.Array:
+    """Layout adapter: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd).
+
+    Repeats KV heads to match the query heads (grouped-query attention),
+    transposes to the kernel's (B,H,S,D) layout and dispatches to the Pallas
+    kernel (or the jnp oracle when ``use_pallas=False``).
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    fn = flash_attention if use_pallas else attention_ref
+    kw = dict(causal=causal, window=window)
+    if use_pallas:
+        kw.update(block_q=block_q, block_k=block_k, interpret=interpret)
+    out = fn(qt, kt, vt, **kw)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D). fp32 softmax."""
+    s = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the fused linear kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.fused_linear.kernel import fused_linear
+from repro.kernels.fused_linear.ref import fused_linear_ref
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_m", "block_n",
+                                             "block_k", "interpret", "use_pallas"))
+def linear(x, w, b, *, activation: str = "relu", block_m: int = 128,
+           block_n: int = 128, block_k: int = 128, interpret: bool = False,
+           use_pallas: bool = True):
+    if use_pallas:
+        return fused_linear(x, w, b, activation=activation, block_m=block_m,
+                            block_n=block_n, block_k=block_k, interpret=interpret)
+    return fused_linear_ref(x, w, b, activation)

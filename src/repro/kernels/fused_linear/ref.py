@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused linear kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACTS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+def fused_linear_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                     activation: str = "relu") -> jax.Array:
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    return ACTS[activation](y).astype(x.dtype)

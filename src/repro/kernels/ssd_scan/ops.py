@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h", "interpret",
+                                             "use_pallas"))
+def ssd(xh, dt, a_log, b_ssm, c_ssm, *, chunk: int = 128, block_h: int = 8,
+        interpret: bool = False, use_pallas: bool = True):
+    if use_pallas:
+        return ssd_scan(xh, dt, a_log, b_ssm, c_ssm, chunk=chunk,
+                        block_h=block_h, interpret=interpret)
+    return ssd_ref(xh, dt, a_log, b_ssm, c_ssm)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel: the sequential
+(non-chunked) SSM recurrence, numerically exact."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xh: jax.Array, dt: jax.Array, a_log: jax.Array,
+            b_ssm: jax.Array, c_ssm: jax.Array) -> jax.Array:
+    """Sequential scan. xh (B,S,n,p); dt (B,S,n); a_log (n,);
+    b_ssm/c_ssm (B,S,ds) -> y (B,S,n,p)."""
+    bsz, s, n, p = xh.shape
+    ds = b_ssm.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, xs):
+        x_t, dt_t, b_t, c_t = xs
+        dec = jnp.exp(dt_t * a)                          # (B,n)
+        upd = dt_t[..., None, None] * b_t[:, None, :, None] * x_t[:, :, None, :].astype(jnp.float32)
+        h = h * dec[..., None, None] + upd               # (B,n,ds,p)
+        y = jnp.einsum("bnsp,bs->bnp", h, c_t.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((bsz, n, ds, p), jnp.float32)
+    xs = (xh.transpose(1, 0, 2, 3), dt.astype(jnp.float32).transpose(1, 0, 2),
+          b_ssm.transpose(1, 0, 2), c_ssm.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xh.dtype)

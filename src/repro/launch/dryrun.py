@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers and compiles on the production meshes, and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); do not move it.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import configs as cfg_lib                     # noqa: E402
+from repro.launch import specs as specs_lib              # noqa: E402
+from repro.launch.hlo_analysis import (collective_bytes,  # noqa: E402
+                                       roofline_from_compiled)
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.models.model import pattern_of                # noqa: E402
+
+
+def model_pattern(cfg):
+    pat = pattern_of(cfg)
+    return pat
+
+
+def _compile(case, mesh):
+    with mesh:
+        jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                         donate_argnums=case.donate)
+        lowered = jitted.lower(*case.args)
+        return lowered.compile()
+
+
+def _cost_terms(compiled, mesh):
+    roof = roofline_from_compiled(compiled, mesh)
+    return roof.flops, roof.hbm_bytes, roof.coll_bytes
+
+
+def run_case(arch: str, shape: str, multi_pod: bool, out_dir=None,
+             extra_rules=None, remat: bool = True, verbose: bool = True,
+             profile: str = "baseline") -> dict:
+    """Compile the full-depth model (memory + sharding proof), plus two
+    shallow-depth replicas whose costs are linearly extrapolated to full
+    depth — XLA's cost analysis counts a while(scan) body once, so the raw
+    full-depth numbers undercount by ~n_units."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    case = specs_lib.build_case(arch, shape, mesh, extra_rules=extra_rules,
+                                remat=remat, profile=profile)
+    t0 = time.time()
+    compiled = _compile(case, mesh)
+    t_compile = time.time() - t0
+
+    cfg_full = cfg_lib.get_config(arch)
+    plen = len(model_pattern(cfg_full))
+    d1, d2 = plen, 2 * plen
+    f1 = _cost_terms(_compile(specs_lib.build_case(
+        arch, shape, mesh, extra_rules=extra_rules, remat=remat,
+        n_layers=d1, unroll=True, microbatch=1, profile=profile), mesh), mesh)
+    f2 = _cost_terms(_compile(specs_lib.build_case(
+        arch, shape, mesh, extra_rules=extra_rules, remat=remat,
+        n_layers=d2, unroll=True, microbatch=1, profile=profile), mesh), mesh)
+    scale = (cfg_full.n_layers - d1) / (d2 - d1)
+    flops, hbm_bytes, coll_total = (
+        a + (b - a) * scale for a, b in zip(f1, f2))
+
+    from repro.launch.hlo_analysis import Roofline
+    mem = compiled.memory_analysis()
+    roof = Roofline(flops, hbm_bytes, coll_total, mesh.devices.size)
+    coll = collective_bytes(compiled.as_text())
+    coll["total_extrapolated"] = int(coll_total)
+    cfg = cfg_lib.get_config(arch)
+    shape_cfg = cfg_lib.get_shape(shape)
+    tokens = shape_cfg.global_batch * (shape_cfg.seq_len if shape_cfg.mode != "decode" else 1)
+    n_active = cfg.n_active_params
+    mult = {"train": 6, "prefill": 2, "decode": 2}[shape_cfg.mode]
+    model_flops = mult * n_active * tokens
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape_cfg.mode,
+        "ok": True,
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                           + mem.output_size_in_bytes),
+        },
+        "roofline": roof.as_dict(),
+        "collectives": coll,
+        "model_flops": model_flops,
+        "useful_flops_frac": model_flops / max(roof.flops, 1.0),
+    }
+    if verbose:
+        m = result["memory"]
+        print(f"[{result['mesh']}] {arch} x {shape}: compile {t_compile:.1f}s")
+        print(f"  memory/device: args {m['argument_bytes']/2**30:.2f} GiB, "
+              f"temp {m['temp_bytes']/2**30:.2f} GiB")
+        r = result["roofline"]
+        print(f"  roofline: compute {r['t_compute_s']:.3e}s  memory "
+              f"{r['t_memory_s']:.3e}s  collective {r['t_collective_s']:.3e}s "
+              f"-> {r['bottleneck']}-bound")
+        print(f"  HLO flops {r['hlo_flops']:.3e}  model flops {model_flops:.3e} "
+              f"(useful frac {result['useful_flops_frac']:.2f})  "
+              f"collective bytes {coll['total']/2**30:.2f} GiB "
+              f"({coll['count']} ops)")
+    if out_dir is not None:
+        out_dir = pathlib.Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}_{shape}_{result['mesh'].replace('x', '-')}"
+        (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=list(cfg_lib.ARCHS) + ["all"])
+    ap.add_argument("--shape", required=True,
+                    choices=list(cfg_lib.SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized"],
+                    help="'optimized' applies the §Perf winning shardings")
+    args = ap.parse_args(argv)
+
+    archs = list(cfg_lib.ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(cfg_lib.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_case(arch, shape, mp, out_dir=args.out,
+                             remat=not args.no_remat, profile=args.profile)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    print(f"FAIL {arch} x {shape} mesh={'2pod' if mp else '1pod'}: "
+                          f"{type(e).__name__}: {e}")
+                    failures.append((arch, shape, mp))
+    if failures:
+        print(f"{len(failures)} failures: {failures}")
+        return 1
+    print("all dry-run cases compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

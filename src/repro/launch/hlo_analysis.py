@@ -1,0 +1,113 @@
+"""Post-compile HLO analysis: collective-traffic accounting + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes, but not collective traffic;
+we parse the optimized HLO text and sum the tensor bytes flowing through
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. (Ring-algorithm per-link factors ~(n-1)/n are folded
+into the link-bandwidth constant, not modeled per op.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-tensor bytes per collective kind over the whole module."""
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        for kind in COLLECTIVES:
+            # match `= <type> kind(` — kind as the op, not a metadata mention
+            m = re.search(r"=\s+(.+?)\s+%?" + kind + r"(-start|-done)?\(", stripped)
+            if m:
+                if m.group(2) == "-done":
+                    break               # counted at -start
+                out[kind] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out
+
+
+# hardware constants (TPU v5e, per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops": self.flops,
+            "hlo_bytes": self.hbm_bytes,
+            "collective_bytes": self.coll_bytes,
+            "chips": self.chips,
+        }
+
+
+def roofline_from_compiled(compiled, mesh) -> Roofline:
+    """cost_analysis() describes the per-device SPMD program; scale by chip
+    count so Roofline holds GLOBAL quantities (its terms divide by chips)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    chips = mesh.devices.size
+    flops = float(cost.get("flops", 0.0)) * chips
+    byts = float(cost.get("bytes accessed", 0.0)) * chips
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(flops, byts, float(coll["total"]) * chips, chips)

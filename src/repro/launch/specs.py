@@ -1,0 +1,237 @@
+"""Per-(arch x shape x mesh) step functions, abstract inputs and shardings.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — as required by the
+multi-pod dry-run. ``build_case`` packages (fn, abstract args, in_shardings)
+ready for ``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfg_lib
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as model_lib
+from repro.models import params as params_lib
+from repro.optim import adamw
+from repro.launch.mesh import batch_axes
+
+ENC_LEN = 1024          # stubbed audio frontend frames (precomputed embeddings)
+RING_FAMILIES = ("dense", "vlm", "moe", "audio")
+
+
+def is_ring(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    """long_500k on full-attention archs -> sliding-window ring cache."""
+    return shape.name == "long_500k" and cfg.family in RING_FAMILIES
+
+
+def cache_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    return cfg.window if is_ring(cfg, shape) else shape.seq_len
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeConfig, mesh,
+              profile: str = "baseline") -> Dict[str, Any]:
+    rules = params_lib.rules_for_mesh(mesh)
+    if shape.mode == "decode" and shape.global_batch < _axis_size(mesh, rules["batch"]):
+        # long_500k: batch=1 cannot use the batch axes; context-parallel the
+        # cache sequence dim over 'data' instead (SSM/hybrid full caches).
+        rules["batch"] = None
+        rules["seq"] = None if is_ring(cfg, shape) else "data"
+    if profile == "optimized" and shape.mode == "decode" and rules.get("seq") is None:
+        # SPerf winner (qwen2.5 decode): shard the cache sequence dim over
+        # 'model' instead of head_dim — kills the GQA resharding full-remat
+        # (collective term 26x down on qwen2.5-32b x decode_32k).
+        rules["hd"] = None
+        rules["seq"] = "model"
+    return rules
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _shard(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _batch_spec(cfg: ArchConfig, shape: ShapeConfig, mesh, rules) -> Dict[str, P]:
+    b_ax = rules["batch"]
+    specs = {"tokens": P(b_ax, None)}
+    if shape.mode == "train":
+        specs["labels"] = P(b_ax, None)
+    if cfg.enc_layers:
+        specs["enc_frames"] = P(b_ax, None, None)
+    return specs
+
+
+def abstract_batch(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    s = shape.seq_len if shape.mode != "decode" else 1
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.mode == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.enc_layers:
+        out["enc_frames"] = jax.ShapeDtypeStruct((b, ENC_LEN), jnp.int32)
+        # frames arrive as embeddings; see input_specs
+        out["enc_frames"] = jax.ShapeDtypeStruct((b, ENC_LEN, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+@dataclasses.dataclass
+class Case:
+    """One dry-run case: jit-able fn + abstract args + shardings."""
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate: Tuple[int, ...] = ()
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Public helper: ShapeDtypeStruct stand-ins for every model input."""
+    cfg = cfg_lib.get_config(arch)
+    shape = cfg_lib.get_shape(shape_name)
+    return abstract_batch(cfg, shape)
+
+
+def acts_for(cfg: ArchConfig, rules) -> model_lib.ActShardings:
+    b_ax = rules["batch"]
+    return model_lib.ActShardings(
+        residual=P(b_ax, None, None),
+        logits=P(b_ax, None, rules.get("vocab")),
+    )
+
+
+def build_case(arch: str, shape_name: str, mesh, *, dtype=jnp.bfloat16,
+               remat: bool = True, extra_rules: Optional[dict] = None,
+               n_layers: Optional[int] = None, unroll: bool = False,
+               microbatch: int = 4,
+               grad_acc_dtype=jnp.float32,
+               moment_dtype=jnp.float32,
+               moe_groups: Optional[int] = None,
+               profile: str = "baseline") -> Case:
+    import dataclasses as _dc
+    cfg = cfg_lib.get_config(arch)
+    shape = cfg_lib.get_shape(shape_name)
+    if n_layers is not None:
+        enc = min(cfg.enc_layers, n_layers)
+        cfg = _dc.replace(cfg, n_layers=n_layers, enc_layers=enc)
+    if moe_groups and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                               dispatch_groups=moe_groups))
+    if profile == "optimized" and cfg.moe is not None:
+        # SPerf winner: shard-local (grouped) MoE dispatch + room for bf16
+        # moments is selected by the train path below
+        groups = _axis_size(mesh, rules_for(cfg, shape, mesh)["batch"])
+        if shape.mode != "decode" or shape.global_batch % max(groups, 1) == 0:
+            if moe_groups is None and groups > 1:
+                cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                                       dispatch_groups=groups))
+    rules = rules_for(cfg, shape, mesh, profile)
+    if extra_rules:
+        rules.update(extra_rules)
+    acts = acts_for(cfg, rules)
+
+    template = model_lib.build_template(cfg)
+    params_abs = params_lib.abstract_params(template, dtype)
+    params_specs = params_lib.partition_specs(template, mesh, rules)
+    params_sh = jax.tree.map(lambda s: _shard(mesh, s), params_specs)
+
+    batch_abs = abstract_batch(cfg, shape)
+    batch_specs = _batch_spec(cfg, shape, mesh, rules)
+    batch_sh = {k: _shard(mesh, v) for k, v in batch_specs.items()}
+
+    if shape.mode == "train":
+        if profile == "optimized":
+            moment_dtype = jnp.bfloat16      # SPerf winner: state HBM halves
+        opt = adamw(1e-4, weight_decay=0.1, moment_dtype=moment_dtype)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = {
+            "step": _shard(mesh, P()),
+            "m": params_sh, "v": params_sh,
+        }
+
+        # gradient accumulation: activations live for one microbatch only
+        n_micro = max(1, microbatch)
+        assert shape.global_batch % n_micro == 0
+
+        def loss_of(p, b):
+            return model_lib.loss_fn(p, b, cfg, remat=remat, acts=acts,
+                                     unroll=unroll)
+
+        def train_step(params, opt_state, batch):
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            else:
+                mb = jax.tree.map(
+                    lambda t: t.reshape(t.shape[0] // n_micro, n_micro,
+                                        *t.shape[1:]).swapaxes(0, 1), batch)
+
+                def acc_fn(carry, b):
+                    loss_i, g_i = jax.value_and_grad(loss_of)(params, b)
+                    l_acc, g_acc = carry
+                    return (l_acc + loss_i,
+                            jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                         g_acc, g_i)), None
+
+                zero = (jnp.zeros((), jnp.float32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, grad_acc_dtype),
+                                     params))
+                if unroll:
+                    # cost-measurement path: unrolled so XLA cost analysis
+                    # sees every microbatch (a scanned body is counted once)
+                    carry = zero
+                    for i in range(n_micro):
+                        carry, _ = acc_fn(carry, jax.tree.map(lambda t: t[i], mb))
+                    loss, grads = carry
+                else:
+                    (loss, grads), _ = jax.lax.scan(acc_fn, zero, mb)
+                loss = loss / n_micro
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, upd)
+            return params, opt_state, loss
+
+        return Case(f"{arch}:{shape_name}", train_step,
+                    (params_abs, opt_abs, batch_abs),
+                    (params_sh, opt_sh, batch_sh), donate=(0, 1))
+
+    if shape.mode == "prefill":
+        def prefill(params, batch):
+            return model_lib.forward(params, batch, cfg, acts=acts,
+                                      unroll=unroll)
+
+        return Case(f"{arch}:{shape_name}", prefill,
+                    (params_abs, batch_abs), (params_sh, batch_sh))
+
+    # decode
+    clen = cache_len_for(cfg, shape)
+    ring = is_ring(cfg, shape)
+    cache_t = model_lib.cache_template(cfg, shape.global_batch, clen,
+                                       enc_len=ENC_LEN if cfg.enc_layers else 0)
+    cache_abs = params_lib.abstract_params(cache_t, dtype)
+    cache_specs = params_lib.partition_specs(cache_t, mesh, rules)
+    cache_sh = jax.tree.map(lambda s: _shard(mesh, s), cache_specs)
+    pos_val = shape.seq_len - 1
+
+    def decode_step(params, cache, tokens):
+        return model_lib.serve_step(params, cache, tokens, jnp.int32(pos_val),
+                                    cfg, ring=ring, acts=acts, unroll=unroll)
+
+    tok_abs = batch_abs["tokens"]
+    tok_sh = batch_sh["tokens"]
+    return Case(f"{arch}:{shape_name}", decode_step,
+                (params_abs, cache_abs, tok_abs),
+                (params_sh, cache_sh, tok_sh), donate=(1,))

@@ -1,0 +1,88 @@
+"""LM training driver: same code path on host CPU (reduced configs) as on
+the production mesh (full configs).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfg_lib
+from repro.checkpoint import latest_step, load_pytree, save_pytree
+from repro.data import markov_stream
+from repro.models import get_bundle
+from repro.models import model as model_lib
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule
+from repro.optim.optimizers import apply_updates
+
+
+def train(arch: str, smoke: bool, steps: int, batch: int, seq: int,
+          lr: float = 3e-4, ckpt_dir=None, log_every: int = 10,
+          seed: int = 0):
+    bundle = get_bundle(arch, smoke=smoke)
+    cfg = bundle.cfg
+    stream = markov_stream(cfg.vocab, seq, batch, seed)
+
+    params = bundle.init(jax.random.PRNGKey(seed))
+    opt = adamw(cosine_schedule(lr, warmup=max(steps // 20, 5), total=steps),
+                weight_decay=0.01)
+    opt_state = opt.init(params)
+    start = 0
+    if ckpt_dir and (s := latest_step(ckpt_dir)) is not None:
+        params = load_pytree(f"{ckpt_dir}/step_{s:08d}.npz", params)
+        start = s
+
+    @jax.jit
+    def step_fn(params, opt_state, tokens, labels):
+        batch_d = {"tokens": tokens, "labels": labels}
+        if cfg.enc_layers:
+            batch_d["enc_frames"] = jnp.zeros(
+                (tokens.shape[0], 16, cfg.d_model), params["final_norm"].dtype)
+        loss, grads = jax.value_and_grad(
+            lambda p: model_lib.loss_fn(p, batch_d, cfg))(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss, gnorm
+
+    losses = []
+    t0 = time.time()
+    for i in range(start, steps):
+        b = stream.next_batch()
+        params, opt_state, loss, gnorm = step_fn(
+            params, opt_state, jnp.asarray(b["tokens"]), jnp.asarray(b["labels"]))
+        losses.append(float(loss))
+        if (i + 1) % log_every == 0:
+            dt = (time.time() - t0) / (i + 1 - start)
+            print(f"step {i+1:5d}  loss {float(loss):.4f}  gnorm {float(gnorm):.2f} "
+                  f" {dt*1e3:.0f} ms/step  (floor ~{stream.entropy_floor():.2f})")
+        if ckpt_dir and (i + 1) % 100 == 0:
+            save_pytree(ckpt_dir, params, step=i + 1)
+    if ckpt_dir:
+        save_pytree(ckpt_dir, params, step=steps)
+    return losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="stablelm-3b", choices=list(cfg_lib.ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+    losses = train(args.arch, args.smoke, args.steps, args.batch, args.seq,
+                   lr=args.lr, ckpt_dir=args.ckpt_dir)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

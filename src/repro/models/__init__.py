@@ -1,0 +1,3 @@
+from repro.models.registry import ModelBundle, bundle_for, get_bundle, demo_batch
+
+__all__ = ["ModelBundle", "bundle_for", "get_bundle", "demo_batch"]

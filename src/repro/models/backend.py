@@ -1,0 +1,50 @@
+"""Compute-backend switch: pure-jnp (default, CPU/compile-safe) vs Pallas
+kernels (TPU target; interpret=True runs the kernel bodies on CPU).
+
+    with backend.use_pallas(interpret=True):
+        logits = model.forward(params, batch, cfg)
+
+Model code consults :func:`attention_impl` / :func:`ssd_impl`; shapes that
+don't meet the kernels' tiling constraints fall back to jnp silently (the
+kernels are drop-in replacements validated against the same oracles).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    pallas: bool = False
+    interpret: bool = False
+    block_q: int = 128
+    block_k: int = 128
+    ssd_block_h: int = 8
+
+
+def current() -> BackendConfig:
+    return getattr(_state, "cfg", BackendConfig())
+
+
+@contextlib.contextmanager
+def use_pallas(interpret: bool = False, **kw):
+    prev = current()
+    _state.cfg = BackendConfig(pallas=True, interpret=interpret, **kw)
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+def attention_ok(seq: int, head_dim: int, block_q: int, block_k: int) -> bool:
+    return (seq % min(block_q, seq) == 0 and seq % min(block_k, seq) == 0
+            and head_dim in (64, 80, 128, 256))
+
+
+def ssd_ok(seq: int, n_heads: int, chunk: int, block_h: int) -> bool:
+    return seq % min(chunk, seq) == 0 and n_heads % min(block_h, n_heads) == 0

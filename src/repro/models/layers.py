@@ -1,0 +1,127 @@
+"""Core layer primitives (pure jnp; Pallas variants live in repro.kernels)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked-causal for train/prefill; one-step for decode)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,H,hd)  k: (B,Sk,KV,hd) -> (B,H,Sq,Sk) with GQA groups."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    return s.reshape(b, h, sq, k.shape[1])
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B,H,Sq,Sk)  v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    b, h, sq, sk = p.shape
+    kv = v.shape[2]
+    g = h // kv
+    pg = p.reshape(b, kv, g, sq, sk)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", pg, v.astype(p.dtype))
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     *, block_q: int = 1024, window: Optional[int] = None,
+                     causal: bool = True) -> jax.Array:
+    """Memory-bounded causal (optionally sliding-window) attention.
+
+    Scans over query blocks so the live score matrix is (B,H,block_q,Sk):
+    the jnp analogue of the flash-attention tiling, and the oracle the Pallas
+    kernel is tested against.
+    q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd)
+    """
+    b, s, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    block_q = min(block_q, s)
+    n_blk, rem = divmod(s, block_q)
+    assert rem == 0, (s, block_q)
+
+    qb = q.reshape(b, n_blk, block_q, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        i, qi = args
+        qpos = i * block_q + jnp.arange(block_q)
+        scores = _gqa_scores(qi, k) * scale             # (B,H,bq,Sk)
+        kpos = jnp.arange(sk)
+        mask = jnp.ones((block_q, sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return (), _gqa_out(p, v)
+
+    _, ob = jax.lax.scan(body, (), (jnp.arange(n_blk), qb))
+    return ob.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B,1,H,hd); k_cache/v_cache: (B,S,KV,hd); pos: () current position.
+    Entries at index > pos are masked out.
+    """
+    s = k_cache.shape[1]
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q, k_cache) * scale            # (B,H,1,S)
+    valid = jnp.arange(s) <= pos
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    return _gqa_out(p, v_cache)
+
+
+def ring_index(pos: jax.Array, size: int) -> jax.Array:
+    """Write index for a ring-buffer (sliding-window) cache."""
+    return jnp.mod(pos, size)

@@ -1,0 +1,444 @@
+"""Unified decoder / encoder-decoder model covering all assigned families.
+
+One config-driven implementation: dense, GQA (+bias, +qk-norm), MoE,
+Mamba-2 SSD, hybrid interleave (Jamba), early-fusion VLM (discrete VQ tokens
+in the shared vocab) and enc-dec audio (frame-embedding frontend stub).
+
+Layers are scanned over "units" (one repetition of ``cfg.layer_pattern``) so
+HLO size is O(pattern), not O(depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import backend
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_rope, causal_attention, decode_attention,
+                                 rms_norm, swiglu)
+from repro.models.moe import moe_ffn
+from repro.models.params import PSpec
+
+@dataclasses.dataclass(frozen=True)
+class ActShardings:
+    """Activation sharding constraints (GSPMD anchor points).
+
+    Without these, weight shardings (e.g. the embed table's d_model over
+    'data') win sharding propagation and activations lose their batch
+    sharding — observed as global-batch-sized buffers per device.
+    """
+    residual: Optional[P] = None     # (batch, seq, d_model)
+    logits: Optional[P] = None       # (batch, seq, vocab)
+
+    def constrain(self, x, which: str = "residual"):
+        spec = getattr(self, which)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+
+_NO_SHARDING = ActShardings()
+
+
+# ---------------------------------------------------------------------------
+# templates
+# ---------------------------------------------------------------------------
+
+
+def pattern_of(cfg: ArchConfig) -> str:
+    if cfg.layer_pattern is not None:
+        return cfg.layer_pattern
+    return "M" if cfg.family == "ssm" else "A"
+
+
+def n_units(cfg: ArchConfig) -> int:
+    pat = pattern_of(cfg)
+    assert cfg.n_layers % len(pat) == 0, (cfg.n_layers, pat)
+    return cfg.n_layers // len(pat)
+
+
+def _attn_template(cfg: ArchConfig, u: int, cross: bool = False) -> Dict[str, PSpec]:
+    d, hd = cfg.d_model, cfg.hd
+    nh, kv = cfg.n_heads, cfg.n_kv_heads
+    t = {
+        "wq": PSpec((u, d, nh * hd), ("layers", "embed", "q_heads")),
+        "wk": PSpec((u, d, kv * hd), ("layers", "embed", "kv_fused")),
+        "wv": PSpec((u, d, kv * hd), ("layers", "embed", "kv_fused")),
+        "wo": PSpec((u, nh * hd, d), ("layers", "q_heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        t["bq"] = PSpec((u, nh * hd), ("layers", "q_heads"), "zeros")
+        t["bk"] = PSpec((u, kv * hd), ("layers", "kv_fused"), "zeros")
+        t["bv"] = PSpec((u, kv * hd), ("layers", "kv_fused"), "zeros")
+    if cfg.qk_norm and not cross:
+        t["q_norm"] = PSpec((u, hd), ("layers", None), "ones")
+        t["k_norm"] = PSpec((u, hd), ("layers", None), "ones")
+    return t
+
+
+def _ffn_template(cfg: ArchConfig, u: int, layer_in_unit: int, global_stride: int) -> Optional[Dict[str, PSpec]]:
+    if cfg.d_ff == 0:
+        return None
+    d, f = cfg.d_model, cfg.d_ff
+    moe = cfg.moe
+    is_moe = moe is not None and (layer_in_unit % moe.every_n == moe.every_n - 1)
+    if is_moe:
+        e = moe.n_experts
+        # expert weights get their own logical axes so sharding variants can
+        # move them independently of the dense path ("moe_d" defaults to the
+        # same mesh axis as "embed"; "moe_f" defaults to replicated)
+        return {
+            "router": PSpec((u, d, e), ("layers", "embed", None), "small"),
+            "w1": PSpec((u, e, d, f), ("layers", "experts", "moe_d", "moe_f")),
+            "w3": PSpec((u, e, d, f), ("layers", "experts", "moe_d", "moe_f")),
+            "w2": PSpec((u, e, f, d), ("layers", "experts", "moe_f", "moe_d")),
+        }
+    return {
+        "w1": PSpec((u, d, f), ("layers", "embed", "mlp")),
+        "w3": PSpec((u, d, f), ("layers", "embed", "mlp")),
+        "w2": PSpec((u, f, d), ("layers", "mlp", "embed")),
+    }
+
+
+def _mamba_template(cfg: ArchConfig, u: int) -> Dict[str, PSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    n = s.n_heads(d)
+    ds = s.d_state
+    conv_ch = d_in + 2 * ds
+    return {
+        "w_xz": PSpec((u, d, 2 * d_in), ("layers", "embed", "ssm_in")),
+        "w_bc": PSpec((u, d, 2 * ds), ("layers", "embed", None)),
+        "w_dt": PSpec((u, d, n), ("layers", "embed", "nheads")),
+        "dt_bias": PSpec((u, n), ("layers", "nheads"), "zeros"),
+        "a_log": PSpec((u, n), ("layers", "nheads"), "zeros"),
+        "d_skip": PSpec((u, n), ("layers", "nheads"), "ones"),
+        "conv_w": PSpec((u, s.d_conv, conv_ch), ("layers", None, "ssm_in")),
+        "conv_b": PSpec((u, conv_ch), ("layers", "ssm_in"), "zeros"),
+        "norm": PSpec((u, d_in), ("layers", "ssm_in"), "ones"),
+        "w_out": PSpec((u, d_in, d), ("layers", "ssm_in", "embed")),
+    }
+
+
+def _unit_template(cfg: ArchConfig, u: int, cross: bool = False) -> Dict[str, Any]:
+    pat = pattern_of(cfg)
+    unit: Dict[str, Any] = {}
+    for j, kind in enumerate(pat):
+        sub: Dict[str, Any] = {"ln1": PSpec((u, cfg.d_model), ("layers", "embed"), "ones")}
+        if kind == "A":
+            sub["attn"] = _attn_template(cfg, u)
+        else:
+            sub["mamba"] = _mamba_template(cfg, u)
+        ffn = _ffn_template(cfg, u, j, len(pat))
+        if ffn is not None:
+            sub["ln2"] = PSpec((u, cfg.d_model), ("layers", "embed"), "ones")
+            sub["ffn"] = ffn
+        if cross:
+            sub["ln_x"] = PSpec((u, cfg.d_model), ("layers", "embed"), "ones")
+            sub["xattn"] = _attn_template(cfg, u, cross=True)
+        unit[f"s{j}"] = sub
+    return unit
+
+
+def build_template(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    t: Dict[str, Any] = {
+        "embed": PSpec((cfg.vocab, d), ("vocab", "embed"), "embed"),
+        "final_norm": PSpec((d,), ("embed",), "ones"),
+        "blocks": _unit_template(cfg, n_units(cfg), cross=cfg.enc_layers > 0),
+    }
+    if not cfg.tie_embeddings:
+        t["unembed"] = PSpec((d, cfg.vocab), ("embed", "vocab"))
+    if cfg.enc_layers:
+        enc_cfg = _encoder_cfg(cfg)
+        t["encoder"] = {
+            "blocks": _unit_template(enc_cfg, cfg.enc_layers),
+            "final_norm": PSpec((d,), ("embed",), "ones"),
+        }
+    return t
+
+
+def _encoder_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, layer_pattern="A", moe=None, enc_layers=0,
+                               n_layers=cfg.enc_layers, qkv_bias=False,
+                               qk_norm=False)
+
+
+# ---------------------------------------------------------------------------
+# forward building blocks
+# ---------------------------------------------------------------------------
+
+
+def _proj_qkv(x, p, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    hd, nh, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attention(x, p, cfg: ArchConfig, *, causal: bool = True):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _proj_qkv(x, p, cfg, positions if causal else None)
+    be = backend.current()
+    if be.pallas and backend.attention_ok(s, cfg.hd, be.block_q, be.block_k):
+        from repro.kernels.flash_attention.ops import gqa_attention
+        o = gqa_attention(q, k, v, causal=causal,
+                          block_q=min(be.block_q, s), block_k=min(be.block_k, s),
+                          interpret=be.interpret)
+    else:
+        o = causal_attention(q, k, v, causal=causal)
+    return o.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+
+
+def _cross_attention(x, enc_out, p, cfg: ArchConfig):
+    b, s, _ = x.shape
+    hd, nh, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    k = (enc_out @ p["wk"]).reshape(b, enc_out.shape[1], kvh, hd)
+    v = (enc_out @ p["wv"]).reshape(b, enc_out.shape[1], kvh, hd)
+    o = causal_attention(q, k, v, causal=False)
+    return o.reshape(b, s, nh * hd) @ p["wo"]
+
+
+def _ffn_apply(x, p, cfg: ArchConfig):
+    if "router" in p:
+        return moe_ffn(x, p, cfg.moe)
+    return swiglu(x, p["w1"], p["w3"], p["w2"])
+
+
+def _sublayer_seq(x, sub, kind: str, cfg: ArchConfig, enc_out=None, causal=True):
+    h = rms_norm(x, sub["ln1"], cfg.norm_eps)
+    if kind == "A":
+        x = x + _attention(h, sub["attn"], cfg, causal=causal)
+    else:
+        x = x + ssm_lib.mamba_block(h, sub["mamba"], cfg)
+    if "xattn" in sub and enc_out is not None:
+        h = rms_norm(x, sub["ln_x"], cfg.norm_eps)
+        x = x + _cross_attention(h, enc_out, sub["xattn"], cfg)
+    if "ffn" in sub:
+        h = rms_norm(x, sub["ln2"], cfg.norm_eps)
+        x = x + _ffn_apply(h, sub["ffn"], cfg)
+    return x
+
+
+def _scan_units(x, blocks, cfg: ArchConfig, enc_out=None, *, causal=True,
+                remat: bool = False, acts: ActShardings = _NO_SHARDING,
+                unroll: bool = False):
+    pat = pattern_of(cfg)
+
+    def unit(xc, unit_params):
+        for j, kind in enumerate(pat):
+            xc = _sublayer_seq(xc, unit_params[f"s{j}"], kind, cfg, enc_out, causal)
+            xc = acts.constrain(xc)
+        return xc
+
+    if remat:
+        unit = jax.checkpoint(unit)
+    y, _ = jax.lax.scan(lambda c, p: (unit(c, p), None), x, blocks,
+                        unroll=unroll)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# public: sequence-mode forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ArchConfig,
+            *, remat: bool = False,
+            acts: ActShardings = _NO_SHARDING,
+            unroll: bool = False) -> jax.Array:
+    """batch: tokens (B,S) int32 [+ enc_frames (B,T,D) for audio]."""
+    tokens = batch["tokens"]
+    x = acts.constrain(jnp.take(params["embed"], tokens, axis=0))
+
+    enc_out = None
+    if cfg.enc_layers:
+        enc_cfg = _encoder_cfg(cfg)
+        e = acts.constrain(batch["enc_frames"].astype(x.dtype))
+        e = _scan_units(e, params["encoder"]["blocks"], enc_cfg, causal=False,
+                        remat=remat, acts=acts, unroll=unroll)
+        enc_out = rms_norm(e, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    x = _scan_units(x, params["blocks"], cfg, enc_out, causal=True, remat=remat,
+                    acts=acts, unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return acts.constrain(x @ unembed, "logits")
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat: bool = False,
+            acts: ActShardings = _NO_SHARDING, unroll: bool = False) -> jax.Array:
+    logits = forward(params, batch, cfg, remat=remat, acts=acts, unroll=unroll)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# public: decode (serve_step) with per-sublayer caches
+# ---------------------------------------------------------------------------
+
+
+def cache_template(cfg: ArchConfig, batch: int, cache_len: int,
+                   enc_len: int = 0) -> Dict[str, Any]:
+    """PSpec pytree for the decode cache (stacked over units)."""
+    pat = pattern_of(cfg)
+    u = n_units(cfg)
+    hd, kvh = cfg.hd, cfg.n_kv_heads
+    blocks: Dict[str, Any] = {}
+    for j, kind in enumerate(pat):
+        if kind == "A":
+            blocks[f"s{j}"] = {
+                "k": PSpec((u, batch, cache_len, kvh, hd),
+                           ("layers", "batch", "seq", None, "hd"), "zeros"),
+                "v": PSpec((u, batch, cache_len, kvh, hd),
+                           ("layers", "batch", "seq", None, "hd"), "zeros"),
+            }
+        else:
+            s = cfg.ssm
+            d_in = s.d_inner(cfg.d_model)
+            blocks[f"s{j}"] = {
+                "conv": PSpec((u, batch, s.d_conv - 1, d_in + 2 * s.d_state),
+                              ("layers", "batch", None, "ssm_in"), "zeros"),
+                "h": PSpec((u, batch, s.n_heads(cfg.d_model), s.d_state, s.head_dim),
+                           ("layers", "batch", "nheads", None, None), "zeros",
+                           dtype=jnp.float32),
+            }
+        if cfg.enc_layers:
+            blocks[f"s{j}"]["xk"] = PSpec(
+                (u, batch, enc_len, kvh, hd),
+                ("layers", "batch", "seq", None, "hd"), "zeros")
+            blocks[f"s{j}"]["xv"] = PSpec(
+                (u, batch, enc_len, kvh, hd),
+                ("layers", "batch", "seq", None, "hd"), "zeros")
+    return {"blocks": blocks}
+
+
+def _decode_sublayer(x, sub, cache_sub, kind: str, cfg: ArchConfig, pos, ring: int):
+    """x (B,1,D); cache entries without the unit dim."""
+    b = x.shape[0]
+    hd, nh, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = rms_norm(x, sub["ln1"], cfg.norm_eps)
+    new_cache = {}
+    if kind == "A":
+        q, k, v = _proj_qkv(h, sub["attn"], cfg, jnp.full((b, 1), pos))
+        slot = jnp.mod(pos, ring) if ring else pos
+        kc = jax.lax.dynamic_update_slice(cache_sub["k"], k.astype(cache_sub["k"].dtype),
+                                          (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache_sub["v"], v.astype(cache_sub["v"].dtype),
+                                          (0, slot, 0, 0))
+        # with a ring buffer every slot is valid once pos >= ring; positions
+        # are only used for masking so pass the cache-local bound.
+        mask_pos = jnp.minimum(pos, kc.shape[1] - 1)
+        o = decode_attention(q, kc, vc, mask_pos)
+        x = x + o.reshape(b, 1, nh * hd) @ sub["attn"]["wo"]
+        new_cache.update(k=kc, v=vc)
+    else:
+        o, conv_state, hstate = ssm_lib.mamba_step(h, sub["mamba"], cfg,
+                                                   cache_sub["conv"], cache_sub["h"])
+        x = x + o
+        new_cache.update(conv=conv_state, h=hstate)
+    if "xattn" in sub:
+        hx = rms_norm(x, sub["ln_x"], cfg.norm_eps)
+        q = (hx @ sub["xattn"]["wq"]).reshape(b, 1, nh, hd)
+        enc_len = cache_sub["xk"].shape[1]
+        o = decode_attention(q, cache_sub["xk"], cache_sub["xv"], enc_len - 1)
+        x = x + o.reshape(b, 1, nh * hd) @ sub["xattn"]["wo"]
+        new_cache.update(xk=cache_sub["xk"], xv=cache_sub["xv"])
+    if "ffn" in sub:
+        hf = rms_norm(x, sub["ln2"], cfg.norm_eps)
+        x = x + _ffn_apply(hf, sub["ffn"], cfg)
+    return x, new_cache
+
+
+def serve_step(params, cache, tokens: jax.Array, pos: jax.Array,
+               cfg: ArchConfig, *, cache_len: Optional[int] = None,
+               ring: bool = False,
+               acts: ActShardings = _NO_SHARDING,
+               unroll: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step. tokens (B,1) -> logits (B,1,V), updated cache.
+
+    ``ring=True`` treats attention caches as sliding-window ring buffers
+    (the sub-quadratic long_500k path for full-attention archs).
+    """
+    pat = pattern_of(cfg)
+    x = acts.constrain(jnp.take(params["embed"], tokens, axis=0))
+
+    def unit(xc, xs):
+        unit_params, unit_cache = xs
+        new_unit_cache = {}
+        for j, kind in enumerate(pat):
+            # cache k inside the scan is (B, cache_len, KV, hd)
+            ring_size = unit_cache[f"s{j}"]["k"].shape[1] if (ring and kind == "A") else 0
+            xc, nc = _decode_sublayer(
+                xc, unit_params[f"s{j}"], unit_cache[f"s{j}"],
+                kind, cfg, pos, ring_size)
+            xc = acts.constrain(xc)
+            new_unit_cache[f"s{j}"] = nc
+        return xc, new_unit_cache
+
+    x, new_blocks = jax.lax.scan(unit, x, (params["blocks"], cache["blocks"]),
+                                 unroll=unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = acts.constrain(x @ unembed, "logits")
+    return logits, {"blocks": new_blocks}
+
+
+def encode_for_decode(params, enc_frames, cfg: ArchConfig):
+    """Run the encoder once and precompute per-layer cross K/V (audio serve)."""
+    enc_cfg = _encoder_cfg(cfg)
+    e = _scan_units(enc_frames, params["encoder"]["blocks"], enc_cfg, causal=False)
+    enc_out = rms_norm(e, params["encoder"]["final_norm"], cfg.norm_eps)
+    return enc_out
+
+
+def fill_cross_cache(params, cache, enc_out, cfg: ArchConfig):
+    """Populate xk/xv cache entries from encoder output."""
+    b, t, _ = enc_out.shape
+    hd, kvh = cfg.hd, cfg.n_kv_heads
+    pat = pattern_of(cfg)
+
+    def per_unit(unit_params):
+        out = {}
+        for j in range(len(pat)):
+            p = unit_params[f"s{j}"]["xattn"]
+            out[f"s{j}"] = {
+                "xk": (enc_out @ p["wk"]).reshape(b, t, kvh, hd),
+                "xv": (enc_out @ p["wv"]).reshape(b, t, kvh, hd),
+            }
+        return out
+
+    filled = jax.vmap(per_unit)(params["blocks"])
+    blocks = dict(cache["blocks"])
+    for j in range(len(pat)):
+        sub = dict(blocks[f"s{j}"])
+        sub["xk"] = filled[f"s{j}"]["xk"].astype(sub["xk"].dtype)
+        sub["xv"] = filled[f"s{j}"]["xv"].astype(sub["xv"].dtype)
+        blocks[f"s{j}"] = sub
+    return {"blocks": blocks}

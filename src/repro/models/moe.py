@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism); the
+dispatch buffer is (E, C, D) so per-expert matmuls are MXU-shaped batched
+GEMMs. Tokens overflowing an expert's capacity are dropped (standard
+capacity-factor semantics); the residual path keeps them lossless.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, int(math.ceil(c / 8) * 8))
+
+
+def router_topk(logits: jax.Array, k: int):
+    """logits (T, E) -> gates (T, k) fp32 (softmaxed over top-k), idx (T, k)."""
+    top, idx = jax.lax.top_k(logits.astype(jnp.float32), k)
+    gates = jax.nn.softmax(top, axis=-1)
+    return gates, idx
+
+
+def _dispatch_one_group(xt: jax.Array, router: jax.Array, e: int, k: int,
+                        cap: int):
+    """xt (T, D) -> dispatch buffer (E, C, D) + combine metadata."""
+    t = xt.shape[0]
+    logits = xt @ router                                 # (T, E)
+    gates, idx = router_topk(logits, k)                  # (T, k)
+
+    flat_expert = idx.reshape(-1)                        # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gates.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                     # stable sort by expert
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+
+    # rank of each slot within its expert group
+    sizes = jnp.bincount(se, length=e)                   # (E,)
+    starts = jnp.cumsum(sizes) - sizes
+    rank = jnp.arange(t * k) - starts[se]
+    keep = rank < cap
+
+    buf = jnp.zeros((e, cap, xt.shape[1]), xt.dtype)
+    se_c = jnp.where(keep, se, 0)
+    rk_c = jnp.where(keep, rank, 0)
+    vals = jnp.where(keep[:, None], xt[st], 0).astype(xt.dtype)
+    buf = buf.at[se_c, rk_c].add(vals)
+    return buf, (se_c, rk_c, st, sg, keep)
+
+
+def _combine_one_group(yb: jax.Array, meta, t: int) -> jax.Array:
+    se_c, rk_c, st, sg, keep = meta
+    contrib = yb[se_c, rk_c] * (sg * keep)[:, None].astype(yb.dtype)
+    return jnp.zeros((t, yb.shape[-1]), yb.dtype).at[st].add(contrib)
+
+
+def moe_ffn(x: jax.Array, params: Dict[str, jax.Array], cfg: MoEConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    params: router (D, E), w1/w3 (E, D, F), w2 (E, F, D).
+
+    With ``cfg.dispatch_groups == G > 1`` the token stream is split into G
+    fixed groups (aligned with the data-parallel shards by the launch layer):
+    routing/sort/scatter stay group-local — only the expert GEMM, whose
+    operands are already (groups x experts)-sharded, crosses the mesh.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = max(1, cfg.dispatch_groups)
+    assert t % g == 0, (t, g)
+    tg = t // g
+    cap = capacity(tg, cfg)
+
+    xg = x.reshape(g, tg, d)
+    bufs, metas = jax.vmap(
+        lambda xt: _dispatch_one_group(xt, params["router"], e, k, cap))(xg)
+    # bufs: (G, E, C, D) — G sharded over data, E over model
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", bufs, params["w1"]))
+    h = h * jnp.einsum("gecd,edf->gecf", bufs, params["w3"])
+    yb = jnp.einsum("gecf,efd->gecd", h, params["w2"])   # (G, E, C, D)
+
+    y = jax.vmap(lambda y_, m: _combine_one_group(y_, m, tg))(yb, metas)
+    return y.reshape(b, s, d)
+
+
+def aux_load_balance_loss(logits: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (used by training drivers)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(idx[..., 0], n_experts)
+    ce = jnp.mean(one_hot, axis=0)
+    return n_experts * jnp.sum(me * ce)

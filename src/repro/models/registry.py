@@ -1,0 +1,60 @@
+"""Model registry: arch-id -> (template, init, apply, serve) bundle."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.models import params as params_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    build_template: Callable[[], Any]
+    init: Callable[[jax.Array], Any]                     # rng -> params
+    forward: Callable[..., jax.Array]
+    loss_fn: Callable[..., jax.Array]
+    serve_step: Callable[..., Any]
+    cache_template: Callable[..., Any]
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return params_lib.abstract_params(self.build_template(), dtype)
+
+
+def bundle_for(cfg: ArchConfig) -> ModelBundle:
+    template = model_lib.build_template(cfg)
+    return ModelBundle(
+        cfg=cfg,
+        build_template=lambda: template,
+        init=lambda rng, dtype=jnp.float32: params_lib.init_params(rng, template, dtype),
+        forward=lambda p, b, **kw: model_lib.forward(p, b, cfg, **kw),
+        loss_fn=lambda p, b, **kw: model_lib.loss_fn(p, b, cfg, **kw),
+        serve_step=lambda p, c, t, pos, **kw: model_lib.serve_step(p, c, t, pos, cfg, **kw),
+        cache_template=lambda batch, cache_len, enc_len=0: model_lib.cache_template(
+            cfg, batch, cache_len, enc_len),
+    )
+
+
+def get_bundle(arch: str, smoke: bool = False) -> ModelBundle:
+    cfg = cfg_lib.get_smoke_config(arch) if smoke else cfg_lib.get_config(arch)
+    return bundle_for(cfg)
+
+
+def demo_batch(cfg: ArchConfig, batch: int, seq: int, rng=None,
+               enc_len: int = 64) -> Dict[str, jax.Array]:
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    r1, r2 = jax.random.split(rng)
+    out = {
+        "tokens": jax.random.randint(r1, (batch, seq), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(r2, (batch, seq), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.enc_layers:
+        out["enc_frames"] = jax.random.normal(
+            jax.random.PRNGKey(7), (batch, enc_len, cfg.d_model), jnp.float32)
+    return out

@@ -1,0 +1,167 @@
+"""Mamba-2 SSD (state-space duality) block — chunked dual form + step form.
+
+Follows arXiv:2405.21060: within-chunk computation uses the quadratic
+(attention-like) dual form, cross-chunk state is carried by a linear
+recurrence, so train/prefill cost is O(S * Q) instead of O(S^2), and decode
+is O(1) per token via the recurrent step.
+
+Shapes: x (B,S,D); d_inner = expand*D; heads n with head_dim p; state ds.
+B/C projections are shared across heads (n_groups=1, as in the 2.7b model).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import backend
+from repro.models.layers import rms_norm
+
+
+def _split_proj(x, params, cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    zx = x @ params["w_xz"]
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = x @ params["w_bc"]
+    b_ssm, c_ssm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    return z, xin, b_ssm, c_ssm, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C), w (K,C), b (C,)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b_ssm: jax.Array, c_ssm: jax.Array, chunk: int,
+                h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh (B,S,n,p); dt (B,S,n) fp32; a_log (n,); b_ssm/c_ssm (B,S,ds).
+    Returns (y (B,S,n,p), final state (B,n,ds,p)).
+    """
+    bsz, s, n, p = xh.shape
+    ds = b_ssm.shape[-1]
+    nc, rem = divmod(s, chunk)
+    assert rem == 0, (s, chunk)
+    a = -jnp.exp(a_log.astype(jnp.float32))             # (n,) negative decay rates
+
+    def rs(t, extra):  # (B,S,...) -> (NC, B, chunk, ...)
+        return t.reshape(bsz, nc, chunk, *extra).transpose(1, 0, 2, *(i + 3 for i in range(len(extra))))
+
+    xc = rs(xh, (n, p))
+    dtc = rs(dt, (n,))
+    bcs = rs(b_ssm, (ds,))
+    ccs = rs(c_ssm, (ds,))
+
+    adt = dtc * a                                       # (NC,B,Q,n) log-decay
+    cum = jnp.cumsum(adt, axis=2)                       # inclusive cumsum
+
+    # intra-chunk dual (quadratic) term
+    qpos = jnp.arange(chunk)
+    causal = qpos[:, None] >= qpos[None, :]
+    scores = jnp.einsum("cbqs,cbks->cbqk", ccs, bcs)    # (NC,B,Q,Q) shared heads
+    # decay from k to q: exp(cum_q - cum_k) for q >= k
+    ldec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (NC,B,Q,K,n)
+    w = scores[..., None] * jnp.where(causal[None, None, :, :, None], ldec, 0.0)
+    w = w * dtc[:, :, None, :, :]                       # * dt_k
+    y_intra = jnp.einsum("cbqkn,cbknp->cbqnp", w.astype(xh.dtype), xc)
+
+    # per-chunk end states
+    wk = jnp.exp(cum[:, :, -1:, :] - cum) * dtc         # (NC,B,Q,n)
+    states = jnp.einsum("cbks,cbkn,cbknp->cbnsp", bcs, wk.astype(xh.dtype), xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (NC,B,n)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, n, ds, p), jnp.float32)
+
+    def step(h, xs):
+        st, dec, cseg, cumseg = xs
+        # inter-chunk contribution for this chunk, using state *before* it
+        y = jnp.einsum("bqs,bnsp,bqn->bqnp", cseg, h.astype(xh.dtype),
+                       jnp.exp(cumseg).astype(xh.dtype))
+        h_next = h * dec[..., None, None] + st.astype(jnp.float32)
+        return h_next, y
+
+    h_final, y_inter = jax.lax.scan(step, h0, (states, chunk_decay, ccs, cum))
+    y = y_intra + y_inter                               # (NC,B,Q,n,p)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(bsz, s, n, p)
+    return y, h_final
+
+
+def ssd_step(xh: jax.Array, dt: jax.Array, a_log: jax.Array,
+             b_ssm: jax.Array, c_ssm: jax.Array,
+             h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. xh (B,n,p); dt (B,n); b/c (B,ds); h (B,n,ds,p)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dec = jnp.exp(dt * a)                               # (B,n)
+    upd = dt[..., None, None] * b_ssm[:, None, :, None] * xh[:, :, None, :].astype(jnp.float32)
+    h = h * dec[..., None, None] + upd
+    y = jnp.einsum("bnsp,bs->bnp", h, c_ssm.astype(jnp.float32))
+    return y.astype(xh.dtype), h
+
+
+def mamba_block(x: jax.Array, params: Dict[str, jax.Array], cfg: ArchConfig,
+                h0=None, return_state: bool = False):
+    """Full Mamba-2 block, sequence mode. x (B,S,D) -> (B,S,D)."""
+    s_cfg = cfg.ssm
+    d_in = s_cfg.d_inner(cfg.d_model)
+    n, p, ds = s_cfg.n_heads(cfg.d_model), s_cfg.head_dim, s_cfg.d_state
+    bsz, s, _ = x.shape
+
+    z, xin, b_ssm, c_ssm, dt = _split_proj(x, params, cfg)
+    conv_in = jnp.concatenate([xin, b_ssm, c_ssm], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xin, b_ssm, c_ssm = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+
+    xh = xin.reshape(bsz, s, n, p)
+    be = backend.current()
+    if (be.pallas and h0 is None and not return_state
+            and backend.ssd_ok(s, n, s_cfg.chunk_size, be.ssd_block_h)):
+        from repro.kernels.ssd_scan.ops import ssd as ssd_kernel
+        y = ssd_kernel(xh, dt, params["a_log"], b_ssm, c_ssm,
+                       chunk=min(s_cfg.chunk_size, s),
+                       block_h=min(be.ssd_block_h, n), interpret=be.interpret)
+        h = None
+    else:
+        y, h = ssd_chunked(xh, dt, params["a_log"], b_ssm, c_ssm,
+                           min(s_cfg.chunk_size, s), h0=h0)
+    y = y + params["d_skip"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    if return_state:
+        return out, h
+    return out
+
+
+def mamba_step(x: jax.Array, params: Dict[str, jax.Array], cfg: ArchConfig,
+               conv_state: jax.Array, h: jax.Array):
+    """Decode step. x (B,1,D); conv_state (B,K-1,C); h (B,n,ds,p)."""
+    s_cfg = cfg.ssm
+    d_in = s_cfg.d_inner(cfg.d_model)
+    n, p, ds = s_cfg.n_heads(cfg.d_model), s_cfg.head_dim, s_cfg.d_state
+    bsz = x.shape[0]
+
+    z, xin, b_ssm, c_ssm, dt = _split_proj(x[:, 0], params, cfg)
+    conv_in = jnp.concatenate([xin, b_ssm, c_ssm], axis=-1)     # (B,C)
+    w = params["conv_w"]
+    full = jnp.concatenate([conv_state, conv_in[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", full, w) + params["conv_b"])
+    new_conv_state = full[:, 1:]
+    xin, b_ssm, c_ssm = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+
+    xh = xin.reshape(bsz, n, p)
+    y, h = ssd_step(xh, dt, params["a_log"], b_ssm, c_ssm, h)
+    y = y + params["d_skip"].astype(x.dtype) [:, None] * xh
+    y = y.reshape(bsz, d_in)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return (y @ params["w_out"])[:, None], new_conv_state, h

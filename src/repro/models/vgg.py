@@ -1,0 +1,115 @@
+"""VGG-11 (the paper's experiment DNN) + MLP, as *layer lists* so the DNN
+partition point indexes the same layer sequence as the Table II cost model.
+
+A model is a pair ``(plan, params)``: ``plan`` is a static tuple of layer
+kinds (hashable, jit-friendly); ``params`` is a matching list of dicts of
+arrays (empty dict for parameterless layers). ``forward_range`` runs layers
+[lo, hi) — the primitive split training is built on.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import VGG11_PLAN, LayerCost
+
+Plan = Tuple[str, ...]
+Params = List[Dict[str, jax.Array]]
+
+
+def init_vgg11(rng: jax.Array, width_mult: float = 1.0, classes: int = 10,
+               image: int = 32) -> Tuple[Plan, Params]:
+    plan: List[str] = []
+    params: Params = []
+    ci, hw = 3, image
+    for item in VGG11_PLAN:
+        if item == "M":
+            plan.append("pool")
+            params.append({})
+            hw //= 2
+        else:
+            co = max(1, int(item * width_mult))
+            rng, k = jax.random.split(rng)
+            scale = math.sqrt(2.0 / (ci * 9))
+            plan.append("conv")
+            params.append({
+                "w": jax.random.normal(k, (3, 3, ci, co)) * scale,
+                "b": jnp.zeros((co,)),
+            })
+            ci = co
+    feat = ci * hw * hw
+    fc1 = max(16, int(4096 * width_mult))
+    dims = [(feat, fc1), (fc1, fc1), (fc1, classes)]
+    for i, (si, so) in enumerate(dims):
+        rng, k = jax.random.split(rng)
+        plan.append("fc_last" if i == len(dims) - 1 else "fc")
+        params.append({
+            "w": jax.random.normal(k, (si, so)) * math.sqrt(2.0 / si),
+            "b": jnp.zeros((so,)),
+        })
+    return tuple(plan), params
+
+
+def init_mlp(rng: jax.Array, sizes=(3072, 128, 64, 10)) -> Tuple[Plan, Params]:
+    plan: List[str] = []
+    params: Params = []
+    for i, (si, so) in enumerate(zip(sizes[:-1], sizes[1:])):
+        rng, k = jax.random.split(rng)
+        plan.append("fc_last" if i == len(sizes) - 2 else "fc")
+        params.append({
+            "w": jax.random.normal(k, (si, so)) * math.sqrt(2.0 / si),
+            "b": jnp.zeros((so,)),
+        })
+    return tuple(plan), params
+
+
+def mlp_layer_costs(sizes=(3072, 128, 64, 10), sf: int = 4) -> List[LayerCost]:
+    from repro.core.costmodel import fc_layer
+    return [fc_layer(f"fc{i}", si, so, sf=sf)
+            for i, (si, so) in enumerate(zip(sizes[:-1], sizes[1:]))]
+
+
+def _apply_layer(kind: str, layer: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if kind == "conv":
+        y = jax.lax.conv_general_dilated(
+            x, layer["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y + layer["b"])
+    if kind == "pool":
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    if kind in ("fc", "fc_last"):
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        y = x @ layer["w"] + layer["b"]
+        return y if kind == "fc_last" else jax.nn.relu(y)
+    raise ValueError(kind)
+
+
+def forward_range(plan: Plan, params: Params, x: jax.Array,
+                  lo: int, hi: int) -> jax.Array:
+    for kind, layer in zip(plan[lo:hi], params[lo:hi]):
+        x = _apply_layer(kind, layer, x)
+    return x
+
+
+def forward(plan: Plan, params: Params, x: jax.Array) -> jax.Array:
+    return forward_range(plan, params, x, 0, len(plan))
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(plan: Plan, params: Params, x, labels, batch: int = 256) -> float:
+    hits, n = 0, 0
+    fwd = jax.jit(lambda p, xx: forward(plan, p, xx))
+    for i in range(0, len(x), batch):
+        logits = fwd(params, x[i:i + batch])
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == labels[i:i + batch]))
+        n += len(x[i:i + batch])
+    return hits / max(n, 1)

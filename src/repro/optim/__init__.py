@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (
+    Optimizer, adamw, sgd, cosine_schedule, clip_by_global_norm, global_norm,
+)
+
+__all__ = ["Optimizer", "adamw", "sgd", "cosine_schedule",
+           "clip_by_global_norm", "global_norm"]

@@ -1,0 +1,106 @@
+"""Minimal pytree optimizers (no external deps).
+
+API mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``jax.tree.map(lambda p, u: p + u, params, updates)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1, warmup)
+        frac = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0, 1)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            upd = jax.tree.map(lambda m, g: (-lr_t * m).astype(g.dtype), mu, grads)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree.map(lambda g: (-lr_t * g.astype(jnp.float32)).astype(g.dtype), grads)
+        return upd, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
+    """``moment_dtype=bfloat16`` halves optimizer-state HBM (the standard
+    large-model memory move; update math still runs in fp32)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m_, g: (b1 * m_.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)).astype(moment_dtype),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: (b2 * v_.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(moment_dtype),
+            state["v"], grads)
+
+        def upd(m_, v_, p):
+            u = ((m_.astype(jnp.float32) / bc1)
+                 / (jnp.sqrt(v_.astype(jnp.float32) / bc2) + eps))
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        return (jax.tree.map(upd, m, v, params),
+                {"step": step, "m": m, "v": v})
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

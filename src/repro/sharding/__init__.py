@@ -1,0 +1,5 @@
+"""Logical-axis sharding rules -> PartitionSpec (see repro.models.params)."""
+from repro.models.params import (DEFAULT_RULES, partition_specs,
+                                 rules_for_mesh)
+
+__all__ = ["DEFAULT_RULES", "partition_specs", "rules_for_mesh"]

@@ -1,0 +1,10 @@
+# Smoke tests and benches must see the host's real device count (1 CPU);
+# only repro.launch.dryrun (run as a subprocess) forces 512 host devices.
+# No XLA_FLAGS are set here on purpose.
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)

@@ -1,0 +1,167 @@
+"""Property-based tests (hypothesis) for the paper-core invariants."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hungarian import assign_channels, hungarian_min
+from repro.core.lyapunov import update_queues
+from repro.core.participation import participation_rates
+from repro.core.partition import (Tier, best_partition, brute_force_partition,
+                                  feasible_interval)
+from repro.core import costmodel as cm
+
+
+# ---------------------------------------------------------------------------
+# Hungarian method == brute force
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_hungarian_matches_bruteforce(m, r, seed):
+    r = min(r, m)
+    cost = np.random.default_rng(seed).uniform(0, 10, size=(r, m))
+    _, total = hungarian_min(cost)
+    best = min(sum(cost[i, p[i]] for i in range(r))
+               for p in itertools.permutations(range(m), r))
+    assert total == pytest.approx(best, abs=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 6), st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_assign_channels_constraints(m, j, seed):
+    j = min(j, m)
+    theta = np.random.default_rng(seed).normal(size=(m, j))
+    eye = assign_channels(theta)
+    # C3: each channel exactly one gateway; C2: each gateway <= 1 channel
+    assert (eye.sum(axis=0) == 1).all()
+    assert (eye.sum(axis=1) <= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# partition-point bisection == exact argmin
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 2**31 - 1), st.booleans())
+def test_partition_bisection_matches_bruteforce(n_layers, seed, tight_mem):
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.1, 10, n_layers)
+    mem = rng.uniform(0.1, 5, n_layers)
+    cap = mem.sum() * (0.6 if tight_mem else 2.0)
+    bottom = Tier(throughput=rng.uniform(0.5, 2), mem_capacity=cap)
+    top = Tier(throughput=rng.uniform(0.5, 2), mem_capacity=cap)
+    got = best_partition(costs, mem, bottom, top)
+    want = brute_force_partition(costs, mem, bottom, top)
+    if want is None:
+        assert got is None
+    else:
+        assert got is not None
+        # equal objective value (tie-breaks may differ only at equal cost)
+        from repro.core.partition import split_time
+        bb = np.zeros(n_layers + 1)
+        assert split_time(costs, got, bottom, top, bb, np.inf) == pytest.approx(
+            split_time(costs, want, bottom, top, bb, np.inf), rel=1e-6)
+
+
+def test_partition_infeasible_memory():
+    costs = np.ones(4)
+    mem = np.ones(4) * 10
+    small = Tier(throughput=1.0, mem_capacity=1.0)
+    assert best_partition(costs, mem, small, small) is None
+    assert feasible_interval(mem, small, small) == (1, 0)
+
+
+# ---------------------------------------------------------------------------
+# participation rates (Eq. 13)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0.01, 100), min_size=2, max_size=12),
+       st.integers(1, 6))
+def test_participation_rates_properties(phi, j):
+    phi = np.asarray(phi)
+    j = min(j, len(phi))
+    g = participation_rates(phi, j)
+    assert (g <= 1.0 + 1e-12).all() and (g >= 0).all()
+    # monotonicity: smaller divergence bound -> >= participation rate
+    order = np.argsort(phi)
+    gs = g[order]
+    assert all(gs[i] >= gs[i + 1] - 1e-9 for i in range(len(gs) - 1))
+    # scale invariance
+    g2 = participation_rates(phi * 7.3, j)
+    np.testing.assert_allclose(g, g2, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Lyapunov queues (Eq. 14)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0, 50), min_size=1, max_size=8),
+       st.integers(0, 2**31 - 1))
+def test_queue_update_form(qs, seed):
+    q = np.asarray(qs)
+    rng = np.random.default_rng(seed)
+    sel = rng.integers(0, 2, size=len(q)).astype(bool)
+    gamma = rng.uniform(0, 1, size=len(q))
+    q2 = update_queues(q, sel, gamma)
+    assert (q2 >= 0).all()
+    np.testing.assert_allclose(q2, np.maximum(q - sel + gamma, 0))
+
+
+def test_queues_bounded_when_selected_every_round():
+    """If a gateway is selected every round, its queue stays bounded."""
+    q = np.zeros(3)
+    gamma = np.array([0.9, 0.5, 0.2])
+    for _ in range(1000):
+        q = update_queues(q, np.ones(3, bool), gamma)
+    assert (q <= 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Table II cost model
+# ---------------------------------------------------------------------------
+
+
+def test_costmodel_positive_and_monotone():
+    layers = cm.vgg11_layers()
+    assert len(layers) == 16        # 8 conv + 5 pool + 3 fc
+    o = cm.flops_vector(layers)
+    assert (o > 0).all()
+    g1 = cm.mem_vector(layers, batch=8)
+    g2 = cm.mem_vector(layers, batch=64)
+    assert (g2 >= g1).all()         # memory grows with batch size
+    assert cm.model_size_bytes(layers) > 0
+
+
+def test_costmodel_energy_quadratic_in_frequency():
+    layers = cm.vgg11_layers(0.25)
+    o = cm.flops_vector(layers)
+    e1 = cm.train_energy_device(o, 8, 5, 32, 1e-27, 16, 1e9)
+    e2 = cm.train_energy_device(o, 8, 5, 32, 1e-27, 16, 2e9)
+    assert e2 == pytest.approx(4 * e1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 16))
+def test_split_time_conservation(l):
+    """device flops + gateway flops == total, for every cut."""
+    layers = cm.vgg11_layers(0.5)
+    o = cm.flops_vector(layers)
+    t = cm.train_time_split(o, l, 1, 1, 1.0, 1.0, 1.0, 1.0)
+    assert t == pytest.approx(o.sum(), rel=1e-9)
+
+
+def test_arch_layer_costs_cover_all_archs():
+    from repro import configs as cfg_lib
+    for a in cfg_lib.ARCHS:
+        cfg = cfg_lib.get_config(a)
+        layers = cm.arch_layers(cfg, seq=4096)
+        assert len(layers) >= cfg.n_layers
+        assert all(l.flops() > 0 for l in layers)

@@ -1,0 +1,140 @@
+"""DDSRA solver unit tests: feasibility of every inner solve + round
+constraints C1-C11 hold on the emitted decisions."""
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.ddsra import (Workload, _cum, ddsra_round, solve_frequency,
+                              solve_gateway, solve_partition, solve_power)
+from repro.core.network import Network, NetworkConfig
+from repro.core.participation import participation_rates
+from repro.core.schedulers import SCHEDULERS, RoundContext
+
+
+@pytest.fixture(scope="module")
+def env():
+    net = Network(NetworkConfig(), np.random.default_rng(0))
+    layers = cm.vgg11_layers(width_mult=0.25)
+    o, g = cm.flops_vector(layers), cm.mem_vector(layers, batch=50)
+    rng = np.random.default_rng(0)
+    d_tilde = np.maximum((rng.uniform(0, 2000, net.cfg.n_devices) * 0.05).astype(int), 4)
+    w = Workload(o, g, cm.model_size_bytes(layers), 5, d_tilde.astype(float))
+    return net, w
+
+
+def test_solve_partition_respects_constraints(env):
+    net, w = env
+    st = net.draw()
+    devs = net.devices_of(0)
+    f_gw = np.full(len(devs), net.cfg.f_gw_max / len(devs))
+    l = solve_partition(w, net, 0, devs, f_gw, st, e_gw_budget=st.e_gw[0])
+    if l is None:
+        pytest.skip("infeasible draw")
+    cumf, cumg = _cum(w.flops), _cum(w.mem)
+    # C7': device memory; C10': device energy
+    assert (cumg[l] <= net.cfg.g_dev_max).all()
+    e_dev = (w.k_iters * w.d_tilde[devs] * net.cfg.v_dev / net.cfg.phi_dev
+             * cumf[l] * net.f_dev[devs] ** 2)
+    assert (e_dev <= st.e_dev[devs] + 1e-9).all()
+    # C8': gateway memory
+    assert np.sum(cumg[-1] - cumg[l]) <= net.cfg.g_gw_max + 1e-9
+
+
+def test_solve_frequency_respects_c6_c9(env):
+    net, w = env
+    st = net.draw()
+    devs = net.devices_of(1)
+    l = np.full(len(devs), 8)
+    budget = st.e_gw[1]
+    f = solve_frequency(w, net, devs, l, st, budget)
+    if f is None:
+        pytest.skip("infeasible draw")
+    assert f.sum() <= net.cfg.f_gw_max + 1e-6
+    cumf = _cum(w.flops)
+    e = np.sum(w.k_iters * w.d_tilde[devs] * net.cfg.v_gw / net.cfg.phi_gw
+               * (cumf[-1] - cumf[l]) * f ** 2)
+    assert e <= budget + 1e-9
+
+
+def test_solve_power_energy_budget(env):
+    net, w = env
+    st = net.draw()
+    for budget in (0.0, 0.5, 5.0, 1e9):
+        p = solve_power(net, 0, 0, st, w.gamma, budget)
+        assert 0.0 <= p <= net.cfg.p_max
+        if p > 0:
+            assert net.uplink_energy(0, 0, p, w.gamma, st) <= budget * (1 + 1e-6)
+    # monotone in budget
+    ps = [solve_power(net, 0, 0, st, w.gamma, b) for b in (0.1, 1.0, 10.0)]
+    assert ps == sorted(ps)
+
+
+def test_solve_gateway_lambda_decomposition(env):
+    net, w = env
+    st = net.draw()
+    sol = solve_gateway(w, net, 0, 0, st)
+    if not sol.feasible:
+        pytest.skip("infeasible draw")
+    t_up = net.uplink_time(0, 0, sol.p_tx, w.gamma, st)
+    t_down = net.downlink_time(0, 0, w.gamma, st)
+    assert sol.delay >= t_up + t_down
+    assert sol.e_gw <= st.e_gw[0] + 1e-9
+
+
+def test_ddsra_round_constraints(env):
+    net, w = env
+    gamma = participation_rates(np.random.default_rng(1).uniform(0.5, 2, 6), 3)
+    q = np.zeros(net.cfg.n_gateways)
+    for t in range(10):
+        st = net.draw()
+        dec = ddsra_round(w, net, st, q, gamma, v=10.0)
+        eye = dec.assignment
+        assert set(np.unique(eye)) <= {0.0, 1.0}          # C1
+        assert (eye.sum(axis=1) <= 1).all()               # C2
+        assert (eye.sum(axis=0) <= 1).all()               # <= J channels used
+        np.testing.assert_allclose(
+            dec.queues, np.maximum(q - dec.selected + gamma, 0))  # Eq. 14
+        q = dec.queues
+
+
+def test_ddsra_long_run_satisfies_participation(env):
+    """C11: time-average participation approaches Gamma_m (small V)."""
+    net, w = env
+    gamma = participation_rates(np.random.default_rng(2).uniform(0.5, 2, 6), 3)
+    q = np.zeros(net.cfg.n_gateways)
+    hist = []
+    for t in range(120):
+        dec = ddsra_round(w, net, net.draw(), q, gamma, v=0.01)
+        q = dec.queues
+        hist.append(dec.selected)
+    rates = np.mean(hist, axis=0)
+    assert (rates >= gamma - 0.12).all(), (rates, gamma)
+
+
+@pytest.mark.parametrize("name", list(SCHEDULERS))
+def test_all_schedulers_emit_valid_decisions(env, name):
+    net, w = env
+    gamma = participation_rates(np.random.default_rng(3).uniform(0.5, 2, 6), 3)
+    sched = SCHEDULERS[name]() if name != "random" else SCHEDULERS[name](0)
+    q = np.zeros(net.cfg.n_gateways)
+    losses = np.ones(net.cfg.n_gateways)
+    for t in range(4):
+        ctx = RoundContext(t, w, net, net.draw(), q, gamma, 10.0, losses)
+        dec = sched.schedule(ctx)
+        assert dec.assignment.shape == (6, 3)
+        assert (dec.assignment.sum(axis=1) <= 1).all()
+        assert dec.selected.sum() <= net.cfg.n_channels
+        q = dec.queues
+
+
+def test_round_robin_cycles(env):
+    net, w = env
+    gamma = np.full(6, 0.5)
+    sched = SCHEDULERS["round_robin"]()
+    seen = set()
+    q = np.zeros(6)
+    for t in range(2):
+        ctx = RoundContext(t, w, net, net.draw(), q, gamma, 10.0, np.ones(6))
+        dec = sched.schedule(ctx)
+        seen |= set(np.where(dec.selected)[0].tolist())
+    assert seen == set(range(6))

@@ -1,0 +1,37 @@
+"""End-to-end FL system behaviour: the full two-tier loop trains a model to
+useful accuracy, DDSRA beats chance, participation tracks targets."""
+import jax
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, FLTrainer
+
+
+@pytest.fixture(scope="module")
+def trainer():
+    cfg = FLConfig(model="mlp", rounds=12, eval_every=6, seed=0)
+    return FLTrainer(cfg)
+
+
+def test_gamma_favours_wide_data_gateway(trainer):
+    # gateway 0's devices hold all 10 classes -> lowest divergence bound
+    assert int(np.argmax(trainer.gamma)) == 0
+    assert (trainer.gamma <= 1.0).all() and (trainer.gamma > 0).all()
+
+
+def test_ddsra_learns_and_respects_participation(trainer):
+    res = trainer.run("ddsra")
+    assert res.accuracy[-1] > 0.6            # well above 0.1 chance
+    assert res.failures == 0                 # resource-feasible rounds only
+    rates = res.participation.mean(axis=0)
+    assert (rates >= res.gamma_targets - 0.35).all()
+    assert len(res.cum_delay) == 12
+    assert np.all(np.diff(res.cum_delay) >= 0)
+
+
+def test_baseline_runs_and_is_not_better(trainer):
+    from repro.models import vgg
+    trainer.bs.params = vgg.init_mlp(jax.random.PRNGKey(0),
+                                     (3072, 128, 64, 10))[1]
+    res = trainer.run("random")
+    assert res.accuracy[-1] > 0.2            # it does learn something

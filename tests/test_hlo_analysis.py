@@ -1,0 +1,75 @@
+"""Unit tests for the HLO collective parser + roofline arithmetic."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                       collective_bytes)
+
+SAMPLE_HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+%fused_computation (param_0: bf16[8,128]) -> bf16[8,128] {
+  ROOT %add = bf16[8,128]{1,0} add(%param_0, %param_0)
+}
+
+ENTRY %main {
+  %p0 = bf16[16,256]{1,0} parameter(0)
+  %ag = bf16[256,256]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={0}
+  %ar = f32[16,256]{1,0} all-reduce(%conv), replica_groups={}, to_apply=%sum
+  %rs = bf16[8,256]{1,0} reduce-scatter(%ag), dimensions={0}, to_apply=%sum
+  %a2a = bf16[16,256]{1,0} all-to-all(%p0), dimensions={0}
+  %cp = bf16[16,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %ags = (bf16[1,4], bf16[2,4]) all-gather-start(%p0), dimensions={0}
+  %agd = bf16[2,4]{1,0} all-gather-done(%ags)
+  %not_a_collective = bf16[99,99]{1,0} add(%p0, %p0)
+}
+"""
+
+
+def test_collective_parser_counts_each_kind():
+    out = collective_bytes(SAMPLE_HLO)
+    assert out["all-gather"] == 256 * 256 * 2 + (1 * 4 + 2 * 4) * 2  # + start op
+    assert out["all-reduce"] == 16 * 256 * 4
+    assert out["reduce-scatter"] == 8 * 256 * 2
+    assert out["all-to-all"] == 16 * 256 * 2
+    assert out["collective-permute"] == 16 * 256 * 2
+    assert out["count"] == 6            # -done not double counted
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_collective_parser_ignores_plain_ops():
+    out = collective_bytes("%x = bf16[4,4] add(%a, %b)\n")
+    assert out["total"] == 0 and out["count"] == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=PEAK_FLOPS * 256, hbm_bytes=0.0, coll_bytes=0.0, chips=256)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.bottleneck == "compute"
+    r2 = Roofline(flops=0.0, hbm_bytes=HBM_BW * 256 * 2, coll_bytes=0.0, chips=256)
+    assert r2.t_memory == pytest.approx(2.0)
+    assert r2.bottleneck == "memory"
+    r3 = Roofline(flops=0.0, hbm_bytes=0.0, coll_bytes=ICI_BW * 256 * 3, chips=256)
+    assert r3.t_collective == pytest.approx(3.0)
+    assert r3.bottleneck == "collective"
+    d = r3.as_dict()
+    assert d["bottleneck"] == "collective" and d["chips"] == 256
+
+
+def test_network_rates_monotone_in_power_and_distance():
+    from repro.core.network import Network, NetworkConfig
+    net = Network(NetworkConfig(), np.random.default_rng(0))
+    st = net.draw()
+    r1 = net.uplink_rate(0, 0, 0.05, st)
+    r2 = net.uplink_rate(0, 0, 0.2, st)
+    assert r2 > r1 > 0
+    # energy is increasing in power for fixed payload
+    e1 = net.uplink_energy(0, 0, 0.05, 1e6, st)
+    e2 = net.uplink_energy(0, 0, 0.2, 1e6, st)
+    assert e2 > e1
+    # time decreasing in power
+    t1 = net.uplink_time(0, 0, 0.05, 1e6, st)
+    t2 = net.uplink_time(0, 0, 0.2, 1e6, st)
+    assert t2 < t1

@@ -1,0 +1,90 @@
+"""Launch-layer tests: input specs cover all 40 combos; pipeline partition;
+GPipe parity (subprocess, 2 host devices); one real dry-run case
+(subprocess, 512 host devices)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+
+def test_input_specs_all_40_combos():
+    from repro.launch.specs import input_specs
+    for arch in cfg_lib.ARCHS:
+        for shape in cfg_lib.SHAPES:
+            specs = input_specs(arch, shape)
+            assert "tokens" in specs
+            sc = cfg_lib.get_shape(shape)
+            b = sc.global_batch
+            s = 1 if sc.mode == "decode" else sc.seq_len
+            assert specs["tokens"].shape == (b, s)
+            if cfg_lib.get_config(arch).enc_layers:
+                assert "enc_frames" in specs
+
+
+def test_choose_cut_balances_uniform_layers():
+    from repro.launch.pipeline import choose_cut
+    costs = np.ones(16)
+    mem = np.ones(16)
+    cut = choose_cut(costs, mem, hbm_per_pod=100.0)
+    assert cut.cut == 8
+
+
+def test_choose_cut_respects_memory():
+    from repro.launch.pipeline import choose_cut
+    costs = np.ones(10)
+    mem = np.concatenate([np.full(5, 10.0), np.full(5, 1.0)])  # heavy bottom
+    cut = choose_cut(costs, mem, hbm_per_pod=30.0)
+    g = np.concatenate([[0], np.cumsum(mem)])
+    assert g[cut.cut] <= 30.0 and g[-1] - g[cut.cut] <= 30.0
+
+
+def _run_sub(code: str, devices: int, timeout: int = 600) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout, check=True).stdout
+
+
+def test_gpipe_parity_subprocess():
+    out = _run_sub("""
+        import jax, numpy as np
+        from repro.launch.pipeline import build_demo, reference_forward
+        mesh = jax.make_mesh((2,), ("pod",))
+        params, x, y = build_demo(mesh, n_layers=4, width=64, batch=8, n_micro=2)
+        ref = reference_forward(params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+        print("PIPELINE_OK")
+    """, devices=2)
+    assert "PIPELINE_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_one_case_subprocess(tmp_path):
+    """End-to-end dry-run on the production 16x16 mesh for one fast case."""
+    out = _run_sub(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_case
+        r = run_case("granite-moe-1b-a400m", "decode_32k", multi_pod=False,
+                     out_dir=r"{tmp_path}")
+        assert r["ok"]
+        assert r["memory"]["peak_bytes"] > 0
+        assert r["roofline"]["t_compute_s"] > 0
+        print("DRYRUN_OK", r["roofline"]["bottleneck"])
+    """, devices=512, timeout=900)
+    assert "DRYRUN_OK" in out
+    files = list(pathlib.Path(tmp_path).glob("*.json"))
+    assert files
+    payload = json.loads(files[0].read_text())
+    assert payload["arch"] == "granite-moe-1b-a400m"

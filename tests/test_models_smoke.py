@@ -1,0 +1,78 @@
+"""Per-arch smoke tests: reduced config, one forward + train step + decode step.
+
+Required by the assignment: instantiate a REDUCED variant of each family
+(<=2 layers, d_model<=512, <=4 experts) and run one forward/train step on CPU
+asserting output shapes + no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as cfg_lib
+from repro.models import get_bundle, demo_batch
+from repro.models import params as params_lib
+from repro.optim import sgd
+from repro.optim.optimizers import apply_updates
+
+ARCHS = list(cfg_lib.ARCHS)
+B, S = 2, 64
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def bundle(request):
+    return get_bundle(request.param, smoke=True)
+
+
+def test_reduced_config_limits(bundle):
+    cfg = bundle.cfg
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+
+
+def test_forward_shapes_no_nans(bundle):
+    cfg = bundle.cfg
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = demo_batch(cfg, B, S)
+    logits = jax.jit(bundle.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+def test_train_step_updates_and_finite(bundle):
+    cfg = bundle.cfg
+    params = bundle.init(jax.random.PRNGKey(1))
+    batch = demo_batch(cfg, B, S)
+    opt = sgd(1e-2, momentum=0.9)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(bundle.loss_fn)(params, batch)
+        upd, state = opt.update(grads, state, params)
+        return apply_updates(params, upd), state, loss
+
+    p2, state, loss = step(params, state, batch)
+    assert jnp.isfinite(loss)
+    # at least one parameter must have moved
+    moved = jax.tree.reduce(
+        lambda a, kv: a or bool(jnp.any(kv)),
+        jax.tree.map(lambda a, b: jnp.any(a != b), params, p2), False)
+    assert moved
+
+
+def test_decode_step(bundle):
+    cfg = bundle.cfg
+    params = bundle.init(jax.random.PRNGKey(2))
+    cache_t = bundle.cache_template(B, 32, enc_len=16)
+    cache = params_lib.init_params(jax.random.PRNGKey(3), cache_t)
+    if cfg.enc_layers:
+        from repro.models import model as model_lib
+        enc = jnp.asarray(
+            jax.random.normal(jax.random.PRNGKey(4), (B, 16, cfg.d_model)))
+        enc_out = model_lib.encode_for_decode(params, enc, cfg)
+        cache = model_lib.fill_cross_cache(params, cache, enc_out, cfg)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = jax.jit(bundle.serve_step)(params, cache, tok, jnp.int32(5))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert jnp.isfinite(logits).all()

@@ -1,0 +1,82 @@
+"""Optimized-profile rules, train/serve driver smokes, checkpoint resume."""
+import dataclasses
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfg_lib
+from repro.launch import specs as specs_lib
+
+
+class _FakeMesh:
+    """Just enough mesh for rules_for (axis sizes, no devices)."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH1 = _FakeMesh({"data": 16, "model": 16})
+
+
+def test_optimized_profile_decode_rules():
+    cfg = cfg_lib.get_config("qwen2.5-32b")
+    shape = cfg_lib.get_shape("decode_32k")
+    base = specs_lib.rules_for(cfg, shape, MESH1)
+    opt = specs_lib.rules_for(cfg, shape, MESH1, profile="optimized")
+    assert base["hd"] == "model" and base["seq"] is None
+    assert opt["hd"] is None and opt["seq"] == "model"   # §Perf winner
+
+
+def test_optimized_profile_keeps_long500k_context_parallel():
+    cfg = cfg_lib.get_config("jamba-v0.1-52b")
+    shape = cfg_lib.get_shape("long_500k")
+    opt = specs_lib.rules_for(cfg, shape, MESH1, profile="optimized")
+    # context-parallel decode already shards seq over data; optimized profile
+    # must not clobber it
+    assert opt["seq"] == "data" and opt["batch"] is None
+
+
+def test_optimized_profile_train_rules_unchanged():
+    cfg = cfg_lib.get_config("stablelm-3b")
+    shape = cfg_lib.get_shape("train_4k")
+    base = specs_lib.rules_for(cfg, shape, MESH1)
+    opt = specs_lib.rules_for(cfg, shape, MESH1, profile="optimized")
+    assert base == opt
+
+
+def test_train_driver_smoke(tmp_path):
+    from repro.launch.train import train
+    losses = train("granite-moe-1b-a400m", smoke=True, steps=6, batch=2,
+                   seq=32, ckpt_dir=str(tmp_path), log_every=100)
+    assert len(losses) == 6 and np.isfinite(losses).all()
+    # checkpoint written and resumable
+    from repro.checkpoint import latest_step
+    assert latest_step(tmp_path) == 6
+    more = train("granite-moe-1b-a400m", smoke=True, steps=8, batch=2,
+                 seq=32, ckpt_dir=str(tmp_path), log_every=100)
+    assert len(more) == 2          # resumed from step 6
+
+
+def test_serve_driver_smoke():
+    from repro.launch.serve import serve
+    out = serve("stablelm-3b", smoke=True, batch=2, prompt_len=4, gen=4)
+    assert out.shape == (2, 4)
+    assert (out >= 0).all()
+
+
+def test_pipeline_cut_on_real_arch_costs():
+    """The paper's partition picks a mid cut for every assigned arch's cost
+    vector under the bottleneck objective with ample memory."""
+    from repro.core import costmodel as cm
+    from repro.launch.pipeline import choose_cut
+    for arch in cfg_lib.ARCHS:
+        cfg = cfg_lib.get_config(arch)
+        layers = cm.arch_layers(cfg, seq=4096)
+        costs = cm.flops_vector(layers)
+        mem = cm.mem_vector(layers, batch=1)
+        cut = choose_cut(costs, mem, hbm_per_pod=1e18)
+        c = np.concatenate([[0], np.cumsum(costs)])
+        frac = c[cut.cut] / c[-1]
+        assert 0.25 <= frac <= 0.75, (arch, frac)   # balanced-ish stages
