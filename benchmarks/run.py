@@ -13,6 +13,7 @@ import traceback
 BENCHES = [
     ("table2_costmodel", "Table II layer-level FLOPs model vs XLA"),
     ("kernel_bench", "Pallas-kernel reference micro-benchmarks"),
+    ("fl_round_bench", "Cohort engine vs sequential FL round (speedup)"),
     ("theorem2_tradeoff", "Theorem 2 [O(1/V), O(sqrt V)] trade-off"),
     ("fig2_participation", "Fig 2 derived vs experimental participation"),
     ("fig456_schedulers", "Figs 4-6 DDSRA vs baselines"),

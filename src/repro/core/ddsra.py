@@ -92,42 +92,35 @@ def solve_partition(w: Workload, net: Network, m: int, devs: np.ndarray,
     n_loc = len(devs)
     big_l = w.n_layers
 
-    # per-device static upper bounds from C7' (memory) and C10' (energy)
-    def dev_bounds():
-        hi = np.full(n_loc, big_l, dtype=int)
-        for i, n in enumerate(devs):
-            mem_ok = cumg <= cfg.g_dev_max
-            e_l = w.k_iters * w.d_tilde[n] * cfg.v_dev / cfg.phi_dev * cumf * f_dev[i] ** 2
-            en_ok = e_l <= st.e_dev[n]
-            ok = np.where(mem_ok & en_ok)[0]
-            hi[i] = ok.max() if len(ok) else -1
-        return hi
+    kd = w.k_iters * w.d_tilde[devs]
 
-    hi_static = dev_bounds()
-    if (hi_static < 0).any():
+    # per-device static upper bounds from C7' (memory) and C10' (energy),
+    # all devices at once on the (n_loc, L+1) grid
+    mem_ok = cumg <= cfg.g_dev_max                              # (L+1,)
+    e_grid = (kd * cfg.v_dev / cfg.phi_dev * f_dev ** 2)[:, None] * cumf[None, :]
+    ok_static = mem_ok[None, :] & (e_grid <= st.e_dev[devs][:, None])
+    if not ok_static.any(axis=1).all():
         return None
+    hi_static = big_l - np.argmax(ok_static[:, ::-1], axis=1)
+
+    # per-device time at every cut, hoisted out of the bisection: (n_loc, L+1)
+    t_grid = kd[:, None] * (
+        cumf[None, :] / (cfg.phi_dev * f_dev)[:, None]
+        + (tot_f - cumf[None, :]) / np.maximum(cfg.phi_gw * f_gw, 1e-9)[:, None])
+    ls_ok_static = np.arange(big_l + 1)[None, :] <= hi_static[:, None]
+    gw_e_coef = kd * cfg.v_gw / cfg.phi_gw * f_gw ** 2
 
     def feasible(eta: float) -> Optional[np.ndarray]:
         """Largest l per device with time <= eta (within static bounds),
         then check joint gateway constraints C8' and C9'."""
-        l_pick = np.zeros(n_loc, dtype=int)
-        for i, n in enumerate(devs):
-            ls = np.arange(big_l + 1)
-            t = w.k_iters * w.d_tilde[n] * (
-                cumf[ls] / (cfg.phi_dev * f_dev[i])
-                + (tot_f - cumf[ls]) / max(cfg.phi_gw * f_gw[i], 1e-9))
-            ok = np.where((t <= eta) & (ls <= hi_static[i]))[0]
-            if len(ok) == 0:
-                return None
-            # prefer the largest l meeting eta: minimizes gateway load (C8'/C9')
-            l_pick[i] = ok.max()
-        gw_mem = float(np.sum(tot_g - cumg[l_pick]))
-        if gw_mem > cfg.g_gw_max:
+        ok = (t_grid <= eta) & ls_ok_static
+        if not ok.any(axis=1).all():
             return None
-        e_tra_gw = float(np.sum(
-            w.k_iters * w.d_tilde[devs] * cfg.v_gw / cfg.phi_gw
-            * (tot_f - cumf[l_pick]) * f_gw ** 2))
-        if e_tra_gw > e_gw_budget:
+        # prefer the largest l meeting eta: minimizes gateway load (C8'/C9')
+        l_pick = big_l - np.argmax(ok[:, ::-1], axis=1)
+        if np.sum(tot_g - cumg[l_pick]) > cfg.g_gw_max:
+            return None
+        if np.sum(gw_e_coef * (tot_f - cumf[l_pick])) > e_gw_budget:
             return None
         return l_pick
 

@@ -32,23 +32,22 @@ def hungarian_min(cost: np.ndarray) -> Tuple[np.ndarray, float]:
         used = np.zeros(c + 1, dtype=bool)
         while True:
             used[j0] = True
-            i0, delta, j1 = p[j0], INF, 0
-            for j in range(1, c + 1):
-                if used[j]:
-                    continue
-                cur = cost[i0 - 1, j - 1] - u[i0] - v[j]
-                if cur < minv[j]:
-                    minv[j] = cur
-                    way[j] = j0
-                if minv[j] < delta:
-                    delta = minv[j]
-                    j1 = j
-            for j in range(c + 1):
-                if used[j]:
-                    u[p[j]] += delta
-                    v[j] -= delta
-                else:
-                    minv[j] -= delta
+            i0 = p[j0]
+            free = ~used[1:]                      # candidate columns 1..c
+            # relax all free columns against row i0 at once
+            cur = cost[i0 - 1, :] - u[i0] - v[1:]
+            better = free & (cur < minv[1:])
+            minv[1:] = np.where(better, cur, minv[1:])
+            way[1:] = np.where(better, j0, way[1:])
+            # masked argmin picks the next column to add to the tree
+            masked = np.where(free, minv[1:], INF)
+            j1 = int(np.argmin(masked)) + 1
+            delta = masked[j1 - 1]
+            # update potentials (matched rows of used columns are distinct)
+            used_j = np.flatnonzero(used)
+            u[p[used_j]] += delta
+            v[used_j] -= delta
+            minv[1:] = np.where(free, minv[1:] - delta, minv[1:])
             j0 = j1
             if p[j0] == 0:
                 break

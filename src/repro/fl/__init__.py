@@ -1,5 +1,6 @@
-from repro.fl.data import FLDataset, make_fl_dataset, sample_batch
+from repro.fl.data import (CohortBatch, FLDataset, make_fl_dataset,
+                           sample_batch, sample_cohort_batch)
 from repro.fl.trainer import FLConfig, FLResult, FLTrainer
 
-__all__ = ["FLDataset", "make_fl_dataset", "sample_batch",
-           "FLConfig", "FLResult", "FLTrainer"]
+__all__ = ["CohortBatch", "FLDataset", "make_fl_dataset", "sample_batch",
+           "sample_cohort_batch", "FLConfig", "FLResult", "FLTrainer"]

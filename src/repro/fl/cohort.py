@@ -1,0 +1,224 @@
+"""Batched cohort split-training engine: one XLA program per FL round.
+
+The seed trainer executed the cohort one device at a time — a fresh jitted
+``split_sgd_step`` per device per local epoch, retraced for every distinct
+partition point ``l`` (a static argnum) and batch shape, with a ``float(loss)``
+host sync after every step. This module replaces that with a single fused
+program per round:
+
+* per-device parameters are a struct-of-arrays pytree (leading device axis),
+* ``jax.vmap`` runs the split forward/backward for the whole cohort at once,
+* ``jax.lax.scan`` iterates the K local epochs inside the same program,
+* the shop-floor + base-station FedAvg reduction is fused into the end of the
+  step, so nothing round-trips to the host until the round result is read.
+
+**Partition point handled as data (masking, not bucketing).** Split training
+at partition point ``l`` computes *exactly* the same parameter update as
+unsplit SGD — the boundary activation/error exchange is mathematically
+transparent (proved by ``tests/test_split_training.py``). The engine
+therefore executes the mathematically-equal fused forward/backward once per
+device and keeps ``l_n`` a *traced per-device array*: it selects, per device,
+which layer boundary's activation statistics are reported (the tensor that
+would cross the device→gateway link), via a masked gather over the stacked
+per-layer activation norms. The alternative — bucketing devices by ``l`` and
+running a separate two-segment program per bucket — would compile
+``O(distinct l)`` programs, reintroduce per-bucket host syncs, and change
+shapes whenever the scheduler's partition decisions change; masking compiles
+exactly once for all rounds, device subsets and partition vectors. The
+tradeoff is that per-tier work is not physically separated on one host — the
+tier *accounting* (delay/energy) lives in ``repro.core.costmodel``, which is
+where the paper keeps it too.
+
+Fixed-shape batching contract: inputs come from
+``repro.fl.data.sample_cohort_batch`` — always ``(N, B_pad, ...)`` with a
+row-validity mask, all devices present, non-participants zero-masked and
+zero-weighted — so varying device subsets never retrace.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.split import flat_params as _flat
+from repro.models import vgg
+from repro.models.vgg import Params, Plan
+
+# Incremented inside the traced bodies (Python side effects run only at trace
+# time), so tests/benchmarks can assert "exactly one compile across rounds".
+TRACE_COUNTS = {"round": 0, "stats": 0}
+
+
+def _unflatten_stacked(flat_nd: jnp.ndarray, like):
+    """(N, P) flat rows -> pytree like ``like`` with leading device axis."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, i = [], 0
+    for leaf in leaves:
+        sz = leaf.size
+        out.append(flat_nd[:, i:i + sz]
+                   .reshape((flat_nd.shape[0],) + leaf.shape)
+                   .astype(leaf.dtype))
+        i += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def _masked_rms(a: jax.Array, mask: jax.Array) -> jax.Array:
+    """RMS over the valid rows of a (B, ...) activation."""
+    a2 = a.reshape(a.shape[0], -1).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0) * a2.shape[1]
+    return jnp.sqrt(jnp.sum(a2 * a2 * mask[:, None]) / denom)
+
+
+def _boundary_rms(plan: Plan, params: Params, x, mask, l) -> jax.Array:
+    """RMS of the activation crossing the device->gateway boundary at cut
+    ``l`` (a traced int: l=0 ships the raw input, l=len(plan) ships logits
+    — i.e. everything ran device-side)."""
+    norms = [_masked_rms(x, mask)]
+    a = x
+    for kind, layer in zip(plan, params):
+        a = vgg._apply_layer(kind, layer, a)
+        norms.append(_masked_rms(a, mask))
+    return jnp.take(jnp.stack(norms), l)
+
+
+# ---------------------------------------------------------------------------
+# one FL round: (devices x K local epochs + FedAvg) fused
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "k_iters", "with_boundary"))
+def _cohort_round(plan: Plan, params: Params, x, y, mask, l_n, weights,
+                  gw_onehot, lr, *, k_iters: int, with_boundary: bool):
+    TRACE_COUNTS["round"] += 1
+    n_dev = x.shape[0]
+    if all(k in ("fc", "fc_last") for k in plan):
+        # flatten images once per round, not inside every scanned epoch
+        x = x.reshape(x.shape[0], x.shape[1], -1)
+    stacked = jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (n_dev,) + p.shape), params)
+
+    def dev_step(p, xb, yb, mb):
+        def loss_of(pp):
+            return vgg.masked_xent_loss(vgg.forward(plan, pp, xb), yb, mb)
+        loss, g = jax.value_and_grad(loss_of)(p)
+        new_p = jax.tree.map(lambda w_, g_: w_ - lr * g_, p, g)
+        return new_p, loss
+
+    def one_epoch(p_stack, _):
+        return jax.vmap(dev_step)(p_stack, x, y, mask)
+
+    final, loss_hist = jax.lax.scan(one_epoch, stacked, None, length=k_iters)
+    dev_losses = loss_hist[-1]                     # loss at start of epoch K,
+    # matching the sequential path's "last split_sgd_step" loss semantics.
+
+    # fused two-tier FedAvg: gateway-level then BS-level weighted averaging
+    # telescopes to one weighted average over participating devices.
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    new_global = jax.tree.map(lambda s: jnp.tensordot(w, s, axes=1), final)
+
+    active = (weights > 0).astype(jnp.float32)
+    gw_count = gw_onehot.T @ active                                 # (M,)
+    gw_loss = (gw_onehot.T @ (dev_losses * active)) / jnp.maximum(gw_count, 1.0)
+
+    if with_boundary:
+        boundary = jax.vmap(
+            lambda p, xb, mb, l: _boundary_rms(plan, p, xb, mb, l)
+        )(final, x, mask, l_n)
+    else:    # skip the extra forward pass; l_n stays unused data
+        boundary = jnp.zeros_like(weights)
+
+    return new_global, gw_loss, gw_count, dev_losses, boundary
+
+
+def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
+                 k_iters: int, lr, with_boundary: bool = True) -> Tuple:
+    """Run one fused FL round for the whole cohort.
+
+    batch: ``repro.fl.data.CohortBatch`` (fixed padded shapes). The leading
+    axis is either "all devices" or "packed slots" — the engine is agnostic;
+    l_n / weights / gw_onehot just have to use the same indexing.
+    l_n: (N,) int partition point per row — traced data, never static.
+    weights: (N,) FedAvg weights (d_tilde for participants, 0 otherwise).
+    gw_onehot: (N, M) row->gateway incidence.
+    with_boundary: also report each row's boundary-activation RMS at its
+    cut l_n (one extra forward pass).
+
+    Returns (new_global_params, per_gateway_loss (M,), per_gateway_count (M,),
+    per_row_loss (N,), boundary_rms (N,)).
+    """
+    return _cohort_round(plan, params,
+                         jnp.asarray(batch.x), jnp.asarray(batch.y),
+                         jnp.asarray(batch.mask),
+                         jnp.asarray(l_n, jnp.int32),
+                         jnp.asarray(weights, jnp.float32),
+                         jnp.asarray(gw_onehot, jnp.float32),
+                         jnp.float32(lr), k_iters=k_iters,
+                         with_boundary=with_boundary)
+
+
+# ---------------------------------------------------------------------------
+# per-device gradient statistics (sigma_n, delta_n, L_n) in one program
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "sigma_samples"))
+def _cohort_stats(plan: Plan, params: Params, x, y, mask, mix_weights, lr,
+                  *, sigma_samples: int):
+    TRACE_COUNTS["stats"] += 1
+    if all(k in ("fc", "fc_last") for k in plan):
+        x = x.reshape(x.shape[0], x.shape[1], -1)
+
+    def batch_grad(p, xb, yb, mb):
+        def loss_of(pp):
+            return vgg.masked_xent_loss(vgg.forward(plan, pp, xb), yb, mb)
+        return _flat(jax.grad(loss_of)(p))
+
+    grads = jax.vmap(lambda xb, yb, mb: batch_grad(params, xb, yb, mb))(
+        x, y, mask)                                              # (N, P)
+
+    # sigma_n: per-sample gradient spread. vmap-of-vmap over (device, sample);
+    # lax.map over the device axis keeps the (S, P) per-sample grad buffer
+    # per-device instead of materializing (N, S, P).
+    s = min(sigma_samples, x.shape[1])
+
+    def dev_sigma(args):
+        xs, ys, ms = args                                        # (S, ...)
+        def one(xi, yi):
+            def loss_of(pp):
+                return vgg.xent_loss(vgg.forward(plan, pp, xi[None]),
+                                     yi[None])
+            return _flat(jax.grad(loss_of)(params))
+        per = jax.vmap(one)(xs, ys)                              # (S, P)
+        cnt = jnp.maximum(jnp.sum(ms), 1.0)
+        mean_g = jnp.sum(per * ms[:, None], axis=0) / cnt
+        dev = jnp.linalg.norm(per - mean_g[None], axis=1)
+        return jnp.sum(dev * ms) / cnt
+
+    sigma = jax.lax.map(dev_sigma, (x[:, :s], y[:, :s], mask[:, :s]))
+
+    # delta_n: divergence from the D_n-weighted global gradient.
+    global_g = jnp.tensordot(mix_weights, grads, axes=1)
+    delta = jnp.linalg.norm(grads - global_g[None], axis=1)
+
+    # L_n: two-point secant along the SGD direction.
+    flat_params = _flat(params)
+    pert = _unflatten_stacked(flat_params[None] - lr * grads, params)
+    grads2 = jax.vmap(batch_grad)(pert, x, y, mask)
+    dw = jnp.linalg.norm(jax.vmap(_flat)(pert) - flat_params[None], axis=1)
+    lips = jnp.linalg.norm(grads2 - grads, axis=1) / jnp.maximum(dw, 1e-9)
+
+    return sigma, delta, lips
+
+
+def cohort_stats(plan: Plan, params: Params, batch, mix_weights, lr,
+                 sigma_samples: int):
+    """sigma/delta/Lipschitz for every device in one jitted program
+    (the seed ran O(devices x samples) sequential jit calls)."""
+    return _cohort_stats(plan, params,
+                         jnp.asarray(batch.x), jnp.asarray(batch.y),
+                         jnp.asarray(batch.mask),
+                         jnp.asarray(mix_weights, jnp.float32),
+                         jnp.float32(lr), sigma_samples=sigma_samples)

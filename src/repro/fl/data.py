@@ -10,7 +10,7 @@ points; the rest is IID spillover).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -76,3 +76,51 @@ def sample_batch(rng: np.random.Generator, ds: FLDataset, n: int,
     idx = rng.choice(len(ds.y_dev[n]), size=min(batch, len(ds.y_dev[n])),
                      replace=False)
     return ds.x_dev[n][idx], ds.y_dev[n][idx]
+
+
+@dataclasses.dataclass
+class CohortBatch:
+    """Fixed-shape padded per-device batches for the cohort engine.
+
+    Every round produces the SAME array shapes regardless of which devices
+    participate — (N, B_pad, ...) with a validity mask — so the jitted cohort
+    step compiles exactly once. Non-participating devices keep all-zero
+    rows and an all-zero mask.
+    """
+    x: np.ndarray        # (N, B_pad, ...) float32
+    y: np.ndarray        # (N, B_pad) int32
+    mask: np.ndarray     # (N, B_pad) float32, 1.0 on valid rows
+
+
+def sample_cohort_batch(rng: np.random.Generator, ds: FLDataset,
+                        device_ids, batch_sizes: np.ndarray,
+                        pad_to: int, capacity: Optional[int] = None,
+                        ) -> CohortBatch:
+    """Sample one padded batch per device in ``device_ids``.
+
+    Draws from ``rng`` in the order given by ``device_ids`` with exactly the
+    same calls as the sequential ``sample_batch`` loop, so a cohort round and
+    the seed per-device loop see identical data for identical rng states.
+
+    Without ``capacity`` the leading axis indexes *all* devices (row n =
+    device n). With ``capacity`` the participating devices are packed into
+    ``capacity`` slots in ``device_ids`` order — the scheduler can select at
+    most (channels x shop-floor size) devices per round, so a fixed slot
+    count keeps shapes static while skipping compute for absent devices.
+    """
+    device_ids = [int(n) for n in device_ids]
+    packed = capacity is not None
+    rows = capacity if packed else len(ds.y_dev)
+    assert len(device_ids) <= rows, "more participants than cohort slots"
+    sample_shape = ds.x_dev[0].shape[1:]
+    x = np.zeros((rows, pad_to) + sample_shape, np.float32)
+    y = np.zeros((rows, pad_to), np.int32)
+    mask = np.zeros((rows, pad_to), np.float32)
+    for slot, n in enumerate(device_ids):
+        xb, yb = sample_batch(rng, ds, n, int(batch_sizes[n]))
+        b = len(yb)
+        row = slot if packed else n
+        x[row, :b] = xb
+        y[row, :b] = yb
+        mask[row, :b] = 1.0
+    return CohortBatch(x, y, mask)

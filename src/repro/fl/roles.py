@@ -10,6 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.fl import split as split_lib
@@ -65,12 +67,19 @@ class BaseStation:
         return self.params
 
 
+@jax.jit
+def _fedavg_stacked(stacked: Params, w: jax.Array) -> Params:
+    """Weighted average over the leading model axis of a stacked pytree."""
+    return jax.tree.map(lambda s: jnp.tensordot(w, s, axes=1), stacked)
+
+
 def fedavg(models: List[Params], weights: np.ndarray) -> Params:
-    """FedAvg over a list of layer-list params."""
-    import jax
-    w = weights / weights.sum()
+    """FedAvg over a list of layer-list params.
 
-    def avg(*leaves):
-        return sum(wi * leaf for wi, leaf in zip(w, leaves))
-
-    return jax.tree.map(avg, *models)
+    Stacks the models and reduces with one jitted tensordot per leaf (the
+    seed built a Python ``sum`` of scaled leaves, one XLA op per model per
+    leaf, retraced on every call).
+    """
+    w = jnp.asarray(weights / weights.sum(), jnp.float32)
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *models)
+    return _fedavg_stacked(stacked, w)

@@ -20,8 +20,10 @@ from repro.core.network import Network, NetworkConfig
 from repro.core.participation import (DataStats, divergence_bound,
                                       participation_rates)
 from repro.core.schedulers import SCHEDULERS, RoundContext
+from repro.fl import cohort as cohort_lib
 from repro.fl import split as split_lib
-from repro.fl.data import FLDataset, make_fl_dataset, sample_batch
+from repro.fl.data import (FLDataset, make_fl_dataset, sample_batch,
+                           sample_cohort_batch)
 from repro.fl.roles import BaseStation, Device, Gateway, fedavg
 from repro.models import vgg
 
@@ -42,6 +44,8 @@ class FLConfig:
     max_dataset: int = 2000
     chi: float = 1.0              # non-IID degree
     sigma_samples: int = 8        # per-sample grads for sigma estimation
+    engine: str = "cohort"        # cohort (fused/jitted) | sequential (seed)
+    boundary_telemetry: bool = False  # per-device boundary-activation RMS
 
 
 @dataclasses.dataclass
@@ -100,14 +104,43 @@ class FLTrainer:
                         for n in self.net.devices_of(m)])
             for m in range(ncfg.n_gateways)]
 
+        # the scheduler can select at most n_channels gateways per round
+        # (C2/C3), so this many slots always fit every round's participants;
+        # packing into them skips compute for absent devices at fixed shapes.
+        per_gw = int(np.bincount(self.net.assign,
+                                 minlength=ncfg.n_gateways).max())
+        self.cohort_capacity = min(ncfg.n_devices, ncfg.n_channels * per_gw)
+
+        self.last_boundary_rms: Optional[np.ndarray] = None
+        t0 = time.perf_counter()
         self.stats = self.estimate_stats(params)
+        self.stats_seconds = time.perf_counter() - t0  # for fl_round_bench
         self.phi = divergence_bound(self.stats, self.net.assign,
                                     cfg.lr, cfg.k_iters)
         self.gamma = participation_rates(self.phi, ncfg.n_channels)
 
     # ------------------------------------------------------------------
-    def estimate_stats(self, params) -> DataStats:
-        """Online estimators for sigma_n, delta_n, L_n (paper Sec. VII-A)."""
+    def estimate_stats(self, params, engine: Optional[str] = None) -> DataStats:
+        """Online estimators for sigma_n, delta_n, L_n (paper Sec. VII-A).
+
+        The cohort engine computes all devices' statistics in one jitted
+        vmap-of-vmap per-sample-grad program; "sequential" keeps the seed's
+        O(devices x samples) loop as the parity/benchmark reference.
+        """
+        if _check_engine(engine or self.cfg.engine) == "sequential":
+            return self._estimate_stats_sequential(params)
+        cfg = self.cfg
+        n_dev = self.net.cfg.n_devices
+        batch = sample_cohort_batch(self.rng, self.ds, range(n_dev),
+                                    self.d_tilde, int(self.d_tilde.max()))
+        mix = self.d_sizes / self.d_sizes.sum()
+        sigma, delta, lips = cohort_lib.cohort_stats(
+            self.plan, params, batch, mix, cfg.lr, cfg.sigma_samples)
+        return DataStats(np.asarray(sigma), np.asarray(delta),
+                         np.maximum(np.asarray(lips), 0.1),
+                         self.d_tilde.astype(float))
+
+    def _estimate_stats_sequential(self, params) -> DataStats:
         cfg = self.cfg
         n_dev = self.net.cfg.n_devices
         grads, sigmas, lips = [], [], []
@@ -140,9 +173,11 @@ class FLTrainer:
                          self.d_tilde.astype(float))
 
     # ------------------------------------------------------------------
-    def run(self, scheduler_name: Optional[str] = None) -> FLResult:
+    def run(self, scheduler_name: Optional[str] = None,
+            engine: Optional[str] = None) -> FLResult:
         cfg = self.cfg
         ncfg = self.net.cfg
+        engine = _check_engine(engine or cfg.engine)
         name = scheduler_name or cfg.scheduler
         sched_cls = SCHEDULERS[name]
         scheduler = sched_cls() if name != "random" else sched_cls(cfg.seed)
@@ -160,7 +195,8 @@ class FLTrainer:
             queues = dec.queues
             parts.append(dec.selected.copy())
 
-            models, weights = [], []
+            # resolve the schedule into trained gateways + per-device cuts
+            trained, l_n = [], np.zeros(ncfg.n_devices, int)
             round_delay = 0.0
             for m in np.where(dec.selected)[0]:
                 j = int(np.argmax(dec.assignment[m]))
@@ -171,13 +207,14 @@ class FLTrainer:
                     failures += 1     # energy/memory violation: round fails
                     continue
                 round_delay = max(round_delay, sol.delay)
-                combined, gw_loss, w_m = self.gateways[m].shop_floor_round(
-                    self.plan, self.bs.params, self.ds, sol.l_split,
-                    cfg.k_iters, cfg.lr, self.rng)
-                models.append(combined)
-                weights.append(w_m)
-                losses[m] = gw_loss
-            self.bs.aggregate(models, np.asarray(weights))
+                trained.append(int(m))
+                for i, dev in enumerate(self.gateways[m].devices):
+                    l_n[dev.idx] = int(sol.l_split[i])
+
+            if engine == "sequential":
+                self._sequential_round(trained, l_n, losses)
+            elif trained:
+                self._cohort_round(trained, l_n, losses)
             delay_sum += round_delay
             cum_delay.append(delay_sum)
             loss_hist.append(float(np.mean(losses)))
@@ -189,6 +226,65 @@ class FLTrainer:
 
         return FLResult(acc, acc_rounds, cum_delay, np.asarray(parts),
                         self.gamma, loss_hist, self.phi, failures)
+
+    # ------------------------------------------------------------------
+    def _sequential_round(self, trained: List[int], l_n: np.ndarray,
+                          losses: np.ndarray) -> None:
+        """Seed per-device Python loop (kept as the parity/bench reference)."""
+        cfg = self.cfg
+        models, weights = [], []
+        for m in trained:
+            gw = self.gateways[m]
+            l_splits = np.asarray([l_n[d.idx] for d in gw.devices])
+            combined, gw_loss, w_m = gw.shop_floor_round(
+                self.plan, self.bs.params, self.ds, l_splits,
+                cfg.k_iters, cfg.lr, self.rng)
+            models.append(combined)
+            weights.append(w_m)
+            losses[m] = gw_loss
+        self.bs.aggregate(models, np.asarray(weights))
+
+    def _cohort_round(self, trained: List[int], l_n: np.ndarray,
+                      losses: np.ndarray) -> None:
+        """One fused XLA program for the whole (devices x K epochs) round,
+        FedAvg included; a single host sync reads the per-gateway losses.
+        Participants are packed into ``cohort_capacity`` fixed slots."""
+        cfg = self.cfg
+        device_ids: List[int] = []
+        for m in trained:
+            device_ids.extend(dev.idx for dev in self.gateways[m].devices)
+        # capacity always fits a schedulable round; fall back to the all-
+        # devices layout (one extra compile, same numerics) if it ever won't
+        cap = self.cohort_capacity if len(device_ids) <= self.cohort_capacity \
+            else self.net.cfg.n_devices
+        l_slot = np.zeros(cap, int)
+        w_slot = np.zeros(cap, np.float32)
+        slot_gw = np.zeros((cap, self.net.cfg.n_gateways), np.float32)
+        for s, n in enumerate(device_ids):
+            l_slot[s] = l_n[n]
+            w_slot[s] = self.d_tilde[n]
+            slot_gw[s, self.net.assign[n]] = 1.0
+        batch = sample_cohort_batch(self.rng, self.ds, device_ids,
+                                    self.d_tilde, int(self.d_tilde.max()),
+                                    capacity=cap)
+        new_global, gw_loss, _, _, boundary = cohort_lib.cohort_round(
+            self.plan, self.bs.params, batch, l_slot, w_slot, slot_gw,
+            cfg.k_iters, cfg.lr, with_boundary=cfg.boundary_telemetry)
+        self.bs.params = new_global
+        if cfg.boundary_telemetry:
+            rms = np.zeros(self.net.cfg.n_devices)
+            rms[device_ids] = np.asarray(boundary)[:len(device_ids)]
+            self.last_boundary_rms = rms
+        gw_loss = np.asarray(gw_loss)
+        for m in trained:
+            losses[m] = float(gw_loss[m])
+
+
+def _check_engine(engine: str) -> str:
+    if engine not in ("cohort", "sequential"):
+        raise ValueError(f"unknown engine {engine!r}: "
+                         f"expected 'cohort' or 'sequential'")
+    return engine
 
 
 def _unflatten_like(flat: np.ndarray, tree):

@@ -1,20 +1,94 @@
-"""Jit'd public wrapper for the fused linear kernel."""
+"""Differentiable public wrapper for the fused linear kernel.
+
+``linear`` is the training-path entry point: a ``jax.custom_vjp`` around the
+Pallas forward (TPU) or the pure-jnp reference (CPU/GPU/interpret), so the
+fc layers of ``repro.models.vgg`` — and therefore the cohort split-training
+engine — run the kernels directory on the hot path in both directions.
+
+Backward strategy: for ``relu``/``none`` the activation mask is recovered
+from the saved *output* (``y > 0``), so the residuals are just ``(x, w, y)``
+and no pre-activation buffer is kept. For smooth activations (silu/gelu) the
+pre-activation is rematerialized with one extra GEMM in the backward pass.
+The three backward contractions (dz@w^T, x^T@dz, sum dz) reuse the fused
+kernel (activation="none") whenever shapes are MXU-tile aligned.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.fused_linear.kernel import fused_linear
-from repro.kernels.fused_linear.ref import fused_linear_ref
+from repro.kernels.fused_linear.ref import ACTS, fused_linear_ref
+
+_BLOCKS = (128, 128, 128)
 
 
-@functools.partial(jax.jit, static_argnames=("activation", "block_m", "block_n",
-                                             "block_k", "interpret", "use_pallas"))
-def linear(x, w, b, *, activation: str = "relu", block_m: int = 128,
-           block_n: int = 128, block_k: int = 128, interpret: bool = False,
-           use_pallas: bool = True):
-    if use_pallas:
-        return fused_linear(x, w, b, activation=activation, block_m=block_m,
-                            block_n=block_n, block_k=block_k, interpret=interpret)
+def _impl_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _aligned(m: int, k: int, n: int, blocks=_BLOCKS) -> bool:
+    bm, bn, bk = blocks
+    return (m % min(bm, m) == 0 and n % min(bn, n) == 0
+            and k % min(bk, k) == 0)
+
+
+def _matmul_act(x, w, b, activation: str, impl: str):
+    """One fused GEMM via the chosen implementation."""
+    m, k = x.shape
+    n = w.shape[1]
+    if impl in ("pallas", "interpret") and _aligned(m, k, n):
+        bm, bn, bk = _BLOCKS
+        return fused_linear(x, w, b, activation=activation, block_m=bm,
+                            block_n=bn, block_k=bk,
+                            interpret=impl == "interpret")
     return fused_linear_ref(x, w, b, activation)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _linear_p(activation: str, impl: str, x, w, b):
+    return _matmul_act(x, w, b, activation, impl)
+
+
+def _linear_fwd(activation, impl, x, w, b):
+    y = _matmul_act(x, w, b, activation, impl)
+    if activation in ("relu", "none"):
+        return y, (x, w, y, None)
+    return y, (x, w, None, b)            # rematerialize z in bwd
+
+
+def _linear_bwd(activation, impl, res, dy):
+    x, w, y, b = res
+    if activation == "none":
+        dz = dy
+    elif activation == "relu":
+        dz = dy * (y > 0).astype(dy.dtype)
+    else:
+        z = _matmul_act(x, w, b, "none", impl)
+        _, act_vjp = jax.vjp(ACTS[activation], z)
+        (dz,) = act_vjp(dy)
+    dx = _matmul_act(dz, w.T, jnp.zeros((w.shape[0],), dy.dtype), "none", impl)
+    dw = _matmul_act(x.T, dz, jnp.zeros((w.shape[1],), dy.dtype), "none", impl)
+    db = jnp.sum(dz.astype(jnp.float32), axis=0).astype(dy.dtype)
+    return dx, dw, db
+
+
+_linear_p.defvjp(_linear_fwd, _linear_bwd)
+
+
+def linear(x, w, b, *, activation: str = "relu", impl: str | None = None):
+    """Fused ``act(x @ w + b)`` with a custom VJP.
+
+    ``impl``: "pallas" | "interpret" | "ref"; defaults to "pallas" on TPU and
+    "ref" elsewhere.
+    """
+    if impl is None:
+        impl = _impl_default()
+    if impl == "ref":
+        # plain jnp: autodiff differentiates it directly; the custom VJP is
+        # only needed where autodiff can't see through pallas_call (and its
+        # hand-written transposes cost ~40% extra on CPU hot loops).
+        return fused_linear_ref(x, w, b, activation)
+    return _linear_p(activation, impl, x, w, b)

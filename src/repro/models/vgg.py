@@ -8,6 +8,7 @@ arrays (empty dict for parameterless layers). ``forward_range`` runs layers
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, List, Sequence, Tuple
 
@@ -15,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.costmodel import VGG11_PLAN, LayerCost
+from repro.kernels.fused_linear import ops as fused_ops
 
 Plan = Tuple[str, ...]
 Params = List[Dict[str, jax.Array]]
@@ -84,8 +86,10 @@ def _apply_layer(kind: str, layer: Dict[str, jax.Array], x: jax.Array) -> jax.Ar
     if kind in ("fc", "fc_last"):
         if x.ndim > 2:
             x = x.reshape(x.shape[0], -1)
-        y = x @ layer["w"] + layer["b"]
-        return y if kind == "fc_last" else jax.nn.relu(y)
+        # fused matmul+bias+activation (Pallas on TPU, jnp ref elsewhere)
+        # with a custom VJP, so split training exercises the kernel path.
+        act = "none" if kind == "fc_last" else "relu"
+        return fused_ops.linear(x, layer["w"], layer["b"], activation=act)
     raise ValueError(kind)
 
 
@@ -105,9 +109,28 @@ def xent_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
     return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
 
 
+def masked_xent_loss(logits: jax.Array, labels: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """Mean cross-entropy over the valid (mask==1) rows of a padded batch.
+
+    Equals ``xent_loss`` on the unpadded batch: padded rows contribute an
+    exact 0 to the sum, so only summation length differs.
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return -jnp.sum(mask * ll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@functools.lru_cache(maxsize=32)
+def _jit_forward(plan: Plan):
+    """Compiled forward per plan, shared across eval rounds (a fresh
+    ``jax.jit`` per call would recompile on every accuracy evaluation)."""
+    return jax.jit(functools.partial(forward, plan))
+
+
 def accuracy(plan: Plan, params: Params, x, labels, batch: int = 256) -> float:
     hits, n = 0, 0
-    fwd = jax.jit(lambda p, xx: forward(plan, p, xx))
+    fwd = _jit_forward(plan)
     for i in range(0, len(x), batch):
         logits = fwd(params, x[i:i + batch])
         hits += int(jnp.sum(jnp.argmax(logits, -1) == labels[i:i + batch]))

@@ -3,6 +3,8 @@ import itertools
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # container may lack hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hungarian import assign_channels, hungarian_min
