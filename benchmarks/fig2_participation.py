@@ -5,67 +5,67 @@ Experimental: Gamma_m recomputed from the OBSERVED divergence
               ||w_hat_m^t - v^{K,t}|| between each shop floor's aggregate and
               a centralized-GD twin trained from the same per-round init.
 The claim validated: the two track each other (same ranking, similar values).
+
+The per-device round loop runs through the cohort engine's fused
+``shop_floor_round`` (one XLA program per round, per-gateway models surfaced
+from the same program), replacing the hand-rolled device-by-device loop; the
+batch stream and numerics match the sequential loop (parity pinned in
+tests/test_cohort.py / tests/test_sim.py).
 """
 from __future__ import annotations
 
 import numpy as np
-import jax
 
 from benchmarks.common import emit, save_json, timed
 from repro.core.participation import participation_rates
-from repro.fl import FLConfig, FLTrainer
-from repro.fl.data import sample_batch
-from repro.fl.roles import fedavg
+from repro.fl import Scenario, Simulation
 from repro.fl import split as split_lib
-from repro.models import vgg
 
 
 def run(rounds: int = 8, model: str = "mlp", seed: int = 0):
-    cfg = FLConfig(model=model, rounds=rounds, seed=seed)
-    tr = FLTrainer(cfg)
-    plan = tr.plan
-    params = tr.bs.params
-    n_ch = tr.net.cfg.n_channels
-    m_gw = tr.net.cfg.n_gateways
+    sim = Simulation(Scenario(model=model, rounds=rounds, seed=seed))
+    plan = sim.plan
+    params = sim.params
+    n_ch = sim.net.cfg.n_channels
+    m_gw = sim.net.cfg.n_gateways
     rng = np.random.default_rng(seed + 7)
+
+    # all devices train every round at the mid cut, in shop-floor order
+    # (gateway 0's devices first — the order the sequential loop sampled in)
+    device_ids = [dev.idx for gw in sim.gateways for dev in gw.devices]
+    l_n = np.full(sim.net.cfg.n_devices, len(plan) // 2, dtype=int)
 
     obs_div = np.zeros(m_gw)
     for _ in range(rounds):
-        # pooled batch for the centralized twin
-        xs, ys = [], []
-        gw_models, gw_weights = [], []
-        for m in range(m_gw):
-            local_models, local_w = [], []
-            for dev in tr.gateways[m].devices:
-                x, y = sample_batch(rng, tr.ds, dev.idx, dev.d_tilde)
-                xs.append(x); ys.append(y)
-                w_n, _ = split_lib.local_train(plan, params, x, y,
-                                               len(plan) // 2, cfg.k_iters, cfg.lr)
-                local_models.append(w_n); local_w.append(dev.d_tilde)
-            gw_models.append(fedavg(local_models, np.asarray(local_w, float)))
-            gw_weights.append(sum(local_w))
-        # centralized GD twin from the same init
-        xc, yc = np.concatenate(xs), np.concatenate(ys)
+        new_global, gw_models, _, batch = sim.engine.shop_floor_round(
+            sim, device_ids, l_n, params=params, rng=rng)
+        # centralized GD twin from the same init, on the pooled device batches
+        valid = batch.mask[device_ids].astype(bool)
+        xc = np.concatenate([batch.x[n][valid[i]]
+                             for i, n in enumerate(device_ids)])
+        yc = np.concatenate([batch.y[n][valid[i]]
+                             for i, n in enumerate(device_ids)])
         v = params
-        for _ in range(cfg.k_iters):
+        for _ in range(sim.scenario.k_iters):
             v, _ = split_lib.split_sgd_step(plan, v, (xc, yc), len(plan) // 2,
-                                            np.float32(cfg.lr))
+                                            np.float32(sim.scenario.lr))
         v_flat = np.asarray(split_lib.flat_params(v))
         for m in range(m_gw):
-            w_flat = np.asarray(split_lib.flat_params(gw_models[m]))
+            w_flat = np.asarray(split_lib.flat_params(
+                [{k: a[m] for k, a in layer.items()} for layer in gw_models]))
             obs_div[m] += np.linalg.norm(w_flat - v_flat) / rounds
-        params = fedavg(gw_models, np.asarray(gw_weights, float))
+        params = new_global
 
     gamma_exp = participation_rates(obs_div, n_ch)
     res = {
-        "derived": tr.gamma.tolist(),
+        "derived": sim.gamma.tolist(),
         "experimental": gamma_exp.tolist(),
-        "phi_derived": tr.phi.tolist(),
+        "phi_derived": sim.phi.tolist(),
         "phi_observed": obs_div.tolist(),
         "rank_corr": float(np.corrcoef(
-            np.argsort(np.argsort(tr.gamma)),
+            np.argsort(np.argsort(sim.gamma)),
             np.argsort(np.argsort(gamma_exp)))[0, 1]),
-        "top1_match": bool(int(np.argmax(tr.gamma)) == int(np.argmax(gamma_exp))),
+        "top1_match": bool(int(np.argmax(sim.gamma)) == int(np.argmax(gamma_exp))),
     }
     save_json("fig2_participation", res)
     return res

@@ -7,35 +7,31 @@ Claims validated (relative orderings, synthetic data):
   * DDSRA participation tracks the derived Gamma_m; baselines starve
     slow/low-loss gateways (Fig. 6)
   * smaller V -> better accuracy, higher delay (Theorem 2 direction, Fig. 4/5)
+
+Every policy runs from ``Simulation.reset()`` — identical model init, batch
+draws AND channel-state sequence (the pre-sim.reset() version of this sweep
+reset params/batch RNG but not the Network RNG, so schedulers were compared
+on different channel realizations).
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
 
 from benchmarks.common import emit, save_json, timed
-from repro.fl import FLConfig, FLTrainer
-from repro.models import vgg
+from repro.fl import Scenario, Simulation
 
 SCHEDS = ["ddsra", "random", "round_robin", "loss_driven", "delay_driven"]
 
 
 def run(rounds: int = 30, model: str = "mlp", v: float = 0.01, seed: int = 0,
         schedulers=None, width_mult: float = 0.25):
-    cfg = FLConfig(model=model, width_mult=width_mult, rounds=rounds, v=v,
-                   seed=seed, eval_every=max(rounds // 6, 1))
-    tr = FLTrainer(cfg)
-    key = jax.random.PRNGKey(seed)
-    if model == "vgg":
-        init = lambda: vgg.init_vgg11(key, cfg.width_mult, cfg.classes)[1]
-    else:
-        init = lambda: vgg.init_mlp(key, (3072, 128, 64, cfg.classes))[1]
-
+    sim = Simulation(Scenario(model=model, width_mult=width_mult,
+                              rounds=rounds, v=v, seed=seed,
+                              eval_every=max(rounds // 6, 1)))
     results = {}
     for name in (schedulers or SCHEDS):
-        tr.bs.params = init()           # identical init for every scheduler
-        tr.rng = np.random.default_rng(cfg.seed + 1)
-        res = tr.run(name)
+        sim.reset()                     # same init, data and channel draws
+        res = sim.run(name)
         results[name] = {
             "accuracy": res.accuracy,
             "acc_rounds": res.acc_rounds,
@@ -44,7 +40,7 @@ def run(rounds: int = 30, model: str = "mlp", v: float = 0.01, seed: int = 0,
             "participation": res.participation.mean(axis=0).tolist(),
             "failures": res.failures,
         }
-    results["gamma_targets"] = tr.gamma.tolist()
+    results["gamma_targets"] = sim.gamma.tolist()
     return results
 
 

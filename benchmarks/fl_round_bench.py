@@ -20,24 +20,22 @@ the improved in-tree sequential path is the lower bound.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, save_json, timed
 from repro.core.network import NetworkConfig
-from repro.fl import FLConfig, FLTrainer
+from repro.fl import Scenario, Simulation
 from repro.fl import cohort as cohort_lib
 
 ROUNDS, DEVICES, GATEWAYS = 10, 20, 5
 
 
 def _simulate(engine: str):
-    cfg = FLConfig(model="mlp", rounds=ROUNDS, seed=0, engine=engine)
-    net_cfg = NetworkConfig(n_gateways=GATEWAYS, n_devices=DEVICES,
-                            n_channels=3)
-    tr = FLTrainer(cfg, net_cfg)          # init runs estimate_stats (timed)
+    sc = Scenario(model="mlp", rounds=ROUNDS, seed=0, engine=engine,
+                  net=NetworkConfig(n_gateways=GATEWAYS, n_devices=DEVICES,
+                                    n_channels=3))
+    sim = Simulation(sc)                  # init runs estimate_stats (timed)
     with timed() as t_run:
-        res = tr.run("ddsra")
-    return tr.stats_seconds, t_run["s"], res
+        res = sim.run("ddsra")
+    return sim.stats_seconds, t_run["s"], res
 
 
 def main(fast: bool = True) -> None:

@@ -1,6 +1,6 @@
 """Benchmark harness: one entry per paper table/figure + roofline report.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--list]
 
 Prints ``name,us_per_call,derived`` CSV lines (plus human-readable detail).
 """
@@ -26,7 +26,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full-size runs (slower, closer to paper scale)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="list benchmark names and exit")
     args = ap.parse_args()
+
+    if args.list:
+        for mod_name, desc in BENCHES:
+            print(f"{mod_name:20s} {desc}")
+        return
+    if args.only and args.only not in {name for name, _ in BENCHES}:
+        ap.error(f"unknown benchmark {args.only!r} (see --list)")
 
     failures = []
     for mod_name, desc in BENCHES:

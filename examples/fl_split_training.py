@@ -2,15 +2,16 @@
 synthetic non-IID data, comparing against a baseline scheduler — the
 paper's headline experiment (Figs. 4-5) at reduced scale.
 
+Each scheduler runs from ``Simulation.reset()``: identical model init,
+batch draws and channel-state sequence, so the comparison is fair.
+
     PYTHONPATH=src python examples/fl_split_training.py [--rounds 40] [--vgg]
 """
 import argparse
 
-import jax
 import numpy as np
 
-from repro.fl import FLConfig, FLTrainer
-from repro.models import vgg
+from repro.fl import Scenario, Simulation
 
 
 def main():
@@ -22,21 +23,13 @@ def main():
                     help="Lyapunov trade-off parameter V")
     args = ap.parse_args()
 
-    cfg = FLConfig(model="vgg" if args.vgg else "mlp",
-                   width_mult=0.125, rounds=args.rounds, v=args.v,
-                   eval_every=max(args.rounds // 6, 1), seed=0)
-    tr = FLTrainer(cfg)
-    key = jax.random.PRNGKey(0)
-    if args.vgg:
-        fresh = lambda: vgg.init_vgg11(key, cfg.width_mult, cfg.classes)[1]
-    else:
-        fresh = lambda: vgg.init_mlp(key, (3072, 128, 64, cfg.classes))[1]
-
-    print(f"participation targets: {np.round(tr.gamma, 2)}")
+    sim = Simulation(Scenario(model="vgg" if args.vgg else "mlp",
+                              width_mult=0.125, rounds=args.rounds, v=args.v,
+                              eval_every=max(args.rounds // 6, 1), seed=0))
+    print(f"participation targets: {np.round(sim.gamma, 2)}")
     for sched in ("ddsra", "round_robin"):
-        tr.bs.params = fresh()
-        tr.rng = np.random.default_rng(1)
-        res = tr.run(sched)
+        sim.reset()
+        res = sim.run(sched)
         print(f"\n[{sched}]")
         for r, a in zip(res.acc_rounds, res.accuracy):
             print(f"  round {r:3d}: accuracy {a:.3f}")

@@ -2,15 +2,15 @@
 
 1. Build the Table II layer-level cost model for VGG-11.
 2. Derive each shop floor's participation rate from the divergence bound.
-3. Run a few DDSRA-scheduled FL rounds with real split training.
+3. Stream a few DDSRA-scheduled FL rounds with real split training through
+   the composable simulation API (Scenario -> Simulation -> rounds()).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import costmodel as cm
-from repro.core.participation import participation_rates
-from repro.fl import FLConfig, FLTrainer
+from repro.fl import Scenario, Simulation
 
 # 1. layer-level cost model ---------------------------------------------------
 layers = cm.vgg11_layers(width_mult=0.25)
@@ -21,15 +21,22 @@ print(f"VGG-11: {len(layers)} layers, "
       f"model size {cm.model_size_bytes(layers)/1e6:.1f} MB")
 print(f"  heaviest layer: {layers[int(np.argmax(flops))].name}")
 
-# 2+3. FL with DDSRA scheduling ----------------------------------------------
-cfg = FLConfig(model="mlp", rounds=10, eval_every=5, v=0.01, seed=0)
-trainer = FLTrainer(cfg)
-print("\nDerived participation rates (Eq. 13):",
-      np.round(trainer.gamma, 2))
+# 2. scenario -> simulation ---------------------------------------------------
+scenario = Scenario(model="mlp", rounds=10, eval_every=5, v=0.01, seed=0)
+sim = Simulation(scenario)
+print("\nDerived participation rates (Eq. 13):", np.round(sim.gamma, 2))
 print("  (gateway 0 holds the widest class variety -> highest rate)")
 
-result = trainer.run("ddsra")
-print(f"\nAfter {cfg.rounds} rounds:")
+# 3. stream the round loop ----------------------------------------------------
+records = []
+for rec in sim.rounds("ddsra"):
+    records.append(rec)
+    if rec.accuracy is not None:
+        print(f"  round {rec.t + 1:2d}: accuracy {rec.accuracy:.3f}  "
+              f"delay so far {rec.cum_delay:.1f}s")
+result = sim.result_of(records)
+
+print(f"\nAfter {scenario.rounds} rounds:")
 print(f"  test accuracy {result.accuracy[-1]:.3f}")
 print(f"  cumulative delay {result.cum_delay[-1]:.1f}s "
       f"({result.failures} resource failures)")

@@ -10,7 +10,7 @@ resources violate the energy/memory constraints.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Any, Dict, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
@@ -83,21 +83,93 @@ def _decision_for(ctx: RoundContext, chosen: np.ndarray) -> RoundDecision:
 
 
 # ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Registry entry: scheduler class + the constructor kwargs it accepts.
+
+    ``kwargs`` names the simulation-provided values (e.g. ``seed``) threaded
+    into the constructor by :func:`make_policy`, so stochastic policies get
+    seeded uniformly instead of by name-matching at the call site.
+    """
+    name: str
+    cls: Type
+    kwargs: Tuple[str, ...] = ()
+
+
+POLICIES: Dict[str, PolicySpec] = {}
+
+
+def register_policy(name: str, *, kwargs: Sequence[str] = ()):
+    """Class decorator registering a scheduling policy under ``name``.
+
+    Registering a duplicate name raises — silent shadowing of a policy would
+    corrupt every sweep that selects schedulers by name.
+    """
+    def deco(cls):
+        if name in POLICIES:
+            raise ValueError(f"policy {name!r} already registered "
+                             f"(by {POLICIES[name].cls.__name__})")
+        POLICIES[name] = PolicySpec(name, cls, tuple(kwargs))
+        cls.name = name
+        return cls
+    return deco
+
+
+def make_policy(name: str, **context: Any):
+    """Instantiate policy ``name``, threading the registry-declared subset of
+    ``context`` (e.g. ``seed=cfg.seed``) into its constructor."""
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(POLICIES)}")
+    spec = POLICIES[name]
+    return spec.cls(**{k: context[k] for k in spec.kwargs if k in context})
+
+
+def policy_state(policy) -> Optional[dict]:
+    """JSON-serializable internal state of a policy (None if stateless).
+
+    Any policy carrying a ``numpy.random.Generator`` named ``rng`` is
+    checkpointable by default; policies with richer state can override
+    ``state_dict()`` / ``load_state_dict()``.
+    """
+    if hasattr(policy, "state_dict"):
+        return policy.state_dict()
+    rng = getattr(policy, "rng", None)
+    if isinstance(rng, np.random.Generator):
+        return {"rng": rng.bit_generator.state}
+    return None
+
+
+def set_policy_state(policy, state: Optional[dict]) -> None:
+    if state is None:
+        return
+    if hasattr(policy, "load_state_dict"):
+        policy.load_state_dict(state)
+        return
+    if "rng" in state and isinstance(getattr(policy, "rng", None),
+                                     np.random.Generator):
+        policy.rng.bit_generator.state = state["rng"]
+
+
+# ---------------------------------------------------------------------------
 # policies
 # ---------------------------------------------------------------------------
 
 
+@register_policy("ddsra")
 class DDSRAScheduler:
-    name = "ddsra"
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
         return ddsra_round(ctx.workload, ctx.net, ctx.state, ctx.queues,
                            ctx.gamma_rates, ctx.v)
 
 
+@register_policy("random", kwargs=("seed",))
 class RandomScheduler:
     """Random Scheduling [26]: uniform J gateways per round."""
-    name = "random"
 
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
@@ -108,9 +180,9 @@ class RandomScheduler:
         return _decision_for(ctx, chosen)
 
 
+@register_policy("round_robin")
 class RoundRobinScheduler:
     """Round Robin [26]: consecutive groups of J gateways."""
-    name = "round_robin"
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
         m, j = ctx.net.cfg.n_gateways, ctx.net.cfg.n_channels
@@ -119,9 +191,9 @@ class RoundRobinScheduler:
         return _decision_for(ctx, chosen)
 
 
+@register_policy("loss_driven")
 class LossDrivenScheduler:
     """Select the J gateways with the largest recent local loss."""
-    name = "loss_driven"
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
         m, j = ctx.net.cfg.n_gateways, ctx.net.cfg.n_channels
@@ -130,9 +202,9 @@ class LossDrivenScheduler:
         return _decision_for(ctx, chosen)
 
 
+@register_policy("delay_driven")
 class DelayDrivenScheduler:
     """Select the J gateways with the smallest fixed-resource delay."""
-    name = "delay_driven"
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
         m, j = ctx.net.cfg.n_gateways, ctx.net.cfg.n_channels
@@ -144,10 +216,5 @@ class DelayDrivenScheduler:
         return _decision_for(ctx, chosen)
 
 
-SCHEDULERS = {
-    "ddsra": DDSRAScheduler,
-    "random": RandomScheduler,
-    "round_robin": RoundRobinScheduler,
-    "loss_driven": LossDrivenScheduler,
-    "delay_driven": DelayDrivenScheduler,
-}
+# legacy name -> class view of the registry (prefer make_policy / POLICIES)
+SCHEDULERS = {name: spec.cls for name, spec in POLICIES.items()}

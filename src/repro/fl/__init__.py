@@ -1,6 +1,11 @@
 from repro.fl.data import (CohortBatch, FLDataset, make_fl_dataset,
                            sample_batch, sample_cohort_batch)
-from repro.fl.trainer import FLConfig, FLResult, FLTrainer
+from repro.fl.sim import (ENGINES, CohortEngine, Engine, FLResult,
+                          RoundRecord, Scenario, SequentialEngine, Simulation,
+                          make_engine, register_engine)
+from repro.fl.trainer import FLConfig, FLTrainer
 
 __all__ = ["CohortBatch", "FLDataset", "make_fl_dataset", "sample_batch",
-           "sample_cohort_batch", "FLConfig", "FLResult", "FLTrainer"]
+           "sample_cohort_batch", "FLConfig", "FLResult", "FLTrainer",
+           "Scenario", "Simulation", "RoundRecord", "Engine", "CohortEngine",
+           "SequentialEngine", "ENGINES", "make_engine", "register_engine"]

@@ -89,9 +89,11 @@ def _boundary_rms(plan: Plan, params: Params, x, mask, l) -> jax.Array:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("plan", "k_iters", "with_boundary"))
+                   static_argnames=("plan", "k_iters", "with_boundary",
+                                    "with_gateway_models"))
 def _cohort_round(plan: Plan, params: Params, x, y, mask, l_n, weights,
-                  gw_onehot, lr, *, k_iters: int, with_boundary: bool):
+                  gw_onehot, lr, *, k_iters: int, with_boundary: bool,
+                  with_gateway_models: bool = False):
     TRACE_COUNTS["round"] += 1
     n_dev = x.shape[0]
     if all(k in ("fc", "fc_last") for k in plan):
@@ -130,11 +132,22 @@ def _cohort_round(plan: Plan, params: Params, x, y, mask, l_n, weights,
     else:    # skip the extra forward pass; l_n stays unused data
         boundary = jnp.zeros_like(weights)
 
-    return new_global, gw_loss, gw_count, dev_losses, boundary
+    if with_gateway_models:
+        # per-gateway shop-floor FedAvg before the global mix: columns of the
+        # (N, M) incidence, weighted by d_tilde and normalized per gateway.
+        gw_w = gw_onehot * weights[:, None]
+        gw_w = gw_w / jnp.maximum(jnp.sum(gw_w, axis=0, keepdims=True), 1e-12)
+        gw_models = jax.tree.map(
+            lambda s: jnp.tensordot(gw_w.T, s, axes=1), final)   # (M, ...)
+    else:
+        gw_models = None
+
+    return new_global, gw_loss, gw_count, dev_losses, boundary, gw_models
 
 
 def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
-                 k_iters: int, lr, with_boundary: bool = True) -> Tuple:
+                 k_iters: int, lr, with_boundary: bool = True,
+                 with_gateway_models: bool = False) -> Tuple:
     """Run one fused FL round for the whole cohort.
 
     batch: ``repro.fl.data.CohortBatch`` (fixed padded shapes). The leading
@@ -145,18 +158,24 @@ def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
     gw_onehot: (N, M) row->gateway incidence.
     with_boundary: also report each row's boundary-activation RMS at its
     cut l_n (one extra forward pass).
+    with_gateway_models: additionally return the per-gateway shop-floor
+    FedAvg models (leading gateway axis), before the global mix — the
+    intermediate the Fig. 2 divergence experiment measures.
 
     Returns (new_global_params, per_gateway_loss (M,), per_gateway_count (M,),
-    per_row_loss (N,), boundary_rms (N,)).
+    per_row_loss (N,), boundary_rms (N,)), plus the gateway models as a sixth
+    element when ``with_gateway_models`` is set.
     """
-    return _cohort_round(plan, params,
-                         jnp.asarray(batch.x), jnp.asarray(batch.y),
-                         jnp.asarray(batch.mask),
-                         jnp.asarray(l_n, jnp.int32),
-                         jnp.asarray(weights, jnp.float32),
-                         jnp.asarray(gw_onehot, jnp.float32),
-                         jnp.float32(lr), k_iters=k_iters,
-                         with_boundary=with_boundary)
+    out = _cohort_round(plan, params,
+                        jnp.asarray(batch.x), jnp.asarray(batch.y),
+                        jnp.asarray(batch.mask),
+                        jnp.asarray(l_n, jnp.int32),
+                        jnp.asarray(weights, jnp.float32),
+                        jnp.asarray(gw_onehot, jnp.float32),
+                        jnp.float32(lr), k_iters=k_iters,
+                        with_boundary=with_boundary,
+                        with_gateway_models=with_gateway_models)
+    return out if with_gateway_models else out[:5]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,630 @@
+"""Composable FL simulation API: Scenario / Policy / Engine protocols.
+
+The simulation surface is built from three explicit, independently pluggable
+protocols:
+
+* **Scenario** — a frozen, JSON-serializable spec of everything that defines
+  an experiment: network config, data distribution, model (resolved through
+  ``repro.models.registry.build_fl_model``), local-training hyperparameters
+  and the default policy/engine names.
+* **Policy** — any object with ``schedule(ctx) -> RoundDecision``; named
+  policies come from the decorator registry in ``repro.core.schedulers``
+  (``make_policy`` threads registry-declared kwargs such as ``seed``).
+* **Engine** — how a scheduled round is physically executed:
+  ``CohortEngine`` (one fused XLA program per round, ``repro.fl.cohort``)
+  or ``SequentialEngine`` (the seed per-device loop, kept as the parity
+  reference). Both implement ``estimate_stats`` + ``train_round``.
+
+On top sits :class:`Simulation`: a streaming ``rounds()`` generator yielding
+one :class:`RoundRecord` per round (decision, delay, gateway losses, queue
+state, optional boundary-activation RMS), with ``run()`` as a thin consumer
+returning the classic :class:`FLResult`, ``reset(seed)`` restoring params,
+batch RNG **and** network channel-state RNG together (fair multi-policy
+sweeps), and ``save()``/``Simulation.resume()`` wired through
+``repro.checkpoint.store`` for bit-identical checkpoint-resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, Iterator, List, Optional, Tuple, Type, Union
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core import costmodel as cm
+from repro.core.ddsra import RoundDecision, Workload
+from repro.core.network import Network, NetworkConfig
+from repro.core.participation import (DataStats, divergence_bound,
+                                      participation_rates)
+from repro.core.schedulers import (POLICIES, RoundContext, make_policy,
+                                   policy_state, set_policy_state)
+from repro.fl import cohort as cohort_lib
+from repro.fl import split as split_lib
+from repro.fl.data import make_fl_dataset, sample_batch, sample_cohort_batch
+from repro.fl.roles import BaseStation, Device, Gateway
+from repro.models import registry as model_registry
+from repro.models import vgg
+
+
+# ---------------------------------------------------------------------------
+# Scenario
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Frozen, serializable spec of one FL experiment."""
+    model: str = "vgg"                 # repro.models.registry.FL_MODELS key
+    width_mult: float = 0.25
+    classes: int = 10
+    mlp_hidden: Tuple[int, ...] = (128, 64)
+    k_iters: int = 5                   # local epochs K
+    lr: float = 0.01                   # step size beta
+    alpha: float = 0.05                # training data sampling ratio
+    rounds: int = 50
+    v: float = 0.01                    # Lyapunov control parameter
+    policy: str = "ddsra"              # default scheduling policy name
+    seed: int = 0
+    eval_every: int = 5
+    max_dataset: int = 2000
+    chi: float = 1.0                   # non-IID degree
+    sigma_samples: int = 8             # per-sample grads for sigma estimation
+    engine: str = "cohort"             # ENGINES key
+    net: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        net = d.pop("net", {})
+        if isinstance(net, dict):
+            net = dict(net)
+            for k in ("f_dev_range", "dist_range"):
+                if k in net:
+                    net[k] = tuple(net[k])
+            net = NetworkConfig(**net)
+        d["mlp_hidden"] = tuple(d.get("mlp_hidden", (128, 64)))
+        return cls(net=net, **d)
+
+
+# ---------------------------------------------------------------------------
+# RoundRecord / FLResult
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """Telemetry for one simulated round (yielded by Simulation.rounds())."""
+    t: int
+    selected: np.ndarray               # (M,) gateway participation this round
+    trained: List[int]                 # gateways that actually trained
+    l_n: np.ndarray                    # (N,) per-device partition points
+    delay: float                       # round delay (max over gateways)
+    cum_delay: float
+    queues: np.ndarray                 # (M,) virtual-queue backlog
+    losses: np.ndarray                 # (M,) per-gateway local losses
+    failures: int                      # resource-infeasible gateways
+    boundary_rms: Optional[np.ndarray] = None   # (N,) when requested
+    accuracy: Optional[float] = None   # test accuracy on eval rounds
+
+
+@dataclasses.dataclass
+class FLResult:
+    accuracy: List[float]
+    acc_rounds: List[int]
+    cum_delay: List[float]
+    participation: np.ndarray          # (T, M)
+    gamma_targets: np.ndarray
+    losses: List[float]
+    phi: np.ndarray
+    failures: int
+
+
+# ---------------------------------------------------------------------------
+# Engines
+# ---------------------------------------------------------------------------
+
+ENGINES: Dict[str, Type["Engine"]] = {}
+
+
+def register_engine(name: str):
+    def deco(cls):
+        if name in ENGINES:
+            raise ValueError(f"engine {name!r} already registered")
+        ENGINES[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def make_engine(name: str) -> "Engine":
+    if name not in ENGINES:
+        raise ValueError(f"unknown engine {name!r}: "
+                         f"expected one of {sorted(ENGINES)}")
+    return ENGINES[name]()
+
+
+class Engine:
+    """Protocol: how a scheduled round is executed on the model."""
+    name: str
+
+    def estimate_stats(self, sim: "Simulation", params) -> DataStats:
+        raise NotImplementedError
+
+    def train_round(self, sim: "Simulation", trained: List[int],
+                    l_n: np.ndarray,
+                    with_boundary: bool = False) -> Optional[np.ndarray]:
+        """Train one round in-place on ``sim`` (params + per-gateway losses);
+        returns the (N,) boundary-activation RMS when requested/supported."""
+        raise NotImplementedError
+
+
+@register_engine("cohort")
+class CohortEngine(Engine):
+    """One fused XLA program per round (see ``repro.fl.cohort``)."""
+
+    def estimate_stats(self, sim: "Simulation", params) -> DataStats:
+        sc = sim.scenario
+        n_dev = sim.net.cfg.n_devices
+        batch = sample_cohort_batch(sim.rng, sim.ds, range(n_dev),
+                                    sim.d_tilde, int(sim.d_tilde.max()))
+        mix = sim.d_sizes / sim.d_sizes.sum()
+        sigma, delta, lips = cohort_lib.cohort_stats(
+            sim.plan, params, batch, mix, sc.lr, sc.sigma_samples)
+        return DataStats(np.asarray(sigma), np.asarray(delta),
+                         np.maximum(np.asarray(lips), 0.1),
+                         sim.d_tilde.astype(float))
+
+    def train_round(self, sim: "Simulation", trained: List[int],
+                    l_n: np.ndarray,
+                    with_boundary: bool = False) -> Optional[np.ndarray]:
+        if not trained:
+            return None
+        sc = sim.scenario
+        device_ids: List[int] = []
+        for m in trained:
+            device_ids.extend(dev.idx for dev in sim.gateways[m].devices)
+        # capacity always fits a schedulable round; fall back to the all-
+        # devices layout (one extra compile, same numerics) if it ever won't
+        cap = sim.cohort_capacity if len(device_ids) <= sim.cohort_capacity \
+            else sim.net.cfg.n_devices
+        l_slot = np.zeros(cap, int)
+        w_slot = np.zeros(cap, np.float32)
+        slot_gw = np.zeros((cap, sim.net.cfg.n_gateways), np.float32)
+        for s, n in enumerate(device_ids):
+            l_slot[s] = l_n[n]
+            w_slot[s] = sim.d_tilde[n]
+            slot_gw[s, sim.net.assign[n]] = 1.0
+        batch = sample_cohort_batch(sim.rng, sim.ds, device_ids,
+                                    sim.d_tilde, int(sim.d_tilde.max()),
+                                    capacity=cap)
+        new_global, gw_loss, _, _, boundary = cohort_lib.cohort_round(
+            sim.plan, sim.params, batch, l_slot, w_slot, slot_gw,
+            sc.k_iters, sc.lr, with_boundary=with_boundary)
+        sim.params = new_global
+        gw_loss = np.asarray(gw_loss)
+        for m in trained:
+            sim.losses[m] = float(gw_loss[m])
+        if with_boundary:
+            rms = np.zeros(sim.net.cfg.n_devices)
+            rms[device_ids] = np.asarray(boundary)[:len(device_ids)]
+            return rms
+        return None
+
+    def shop_floor_round(self, sim: "Simulation", device_ids: List[int],
+                         l_n: np.ndarray, params=None,
+                         rng: Optional[np.random.Generator] = None):
+        """Fused round over ``device_ids`` that also surfaces the per-gateway
+        shop-floor models (the intermediate the Fig. 2 divergence experiment
+        compares against a centralized twin).
+
+        Batches are drawn from ``rng`` in ``device_ids`` order — exactly the
+        draws the sequential per-device loop would make — and returned so the
+        caller can, e.g., pool them for a centralized-GD twin.
+
+        Returns (new_global, gateway_models (leading M axis), gateway_losses,
+        CohortBatch).
+        """
+        sc = sim.scenario
+        rng = sim.rng if rng is None else rng
+        params = sim.params if params is None else params
+        weights = np.zeros(sim.net.cfg.n_devices, np.float32)
+        weights[list(device_ids)] = sim.d_tilde[list(device_ids)]
+        batch = sample_cohort_batch(rng, sim.ds, device_ids, sim.d_tilde,
+                                    int(sim.d_tilde.max()))
+        new_global, gw_loss, _, _, _, gw_models = cohort_lib.cohort_round(
+            sim.plan, params, batch, l_n, weights, sim.net.a,
+            sc.k_iters, sc.lr, with_boundary=False, with_gateway_models=True)
+        return new_global, gw_models, np.asarray(gw_loss), batch
+
+
+@register_engine("sequential")
+class SequentialEngine(Engine):
+    """Seed per-device Python loop (kept as the parity/bench reference)."""
+
+    def estimate_stats(self, sim: "Simulation", params) -> DataStats:
+        sc = sim.scenario
+        n_dev = sim.net.cfg.n_devices
+        grads, sigmas, lips = [], [], []
+        for n in range(n_dev):
+            x, y = sample_batch(sim.rng, sim.ds, n, sim.d_tilde[n])
+            g = np.asarray(split_lib.flat_grad(sim.plan, params, x, y))
+            grads.append(g)
+            # sigma: per-sample gradient spread
+            m_s = min(sc.sigma_samples, len(y))
+            per = [np.asarray(split_lib.flat_grad(sim.plan, params,
+                                                  x[i:i + 1], y[i:i + 1]))
+                   for i in range(m_s)]
+            mean_g = np.mean(per, axis=0)
+            sigmas.append(float(np.mean([np.linalg.norm(p - mean_g)
+                                         for p in per])))
+            # L_n: two-point secant
+            w0 = split_lib.flat_params(params)
+            pert = jax.tree.map(
+                lambda p_, gg: p_ - sc.lr * gg,
+                params, jax.tree.unflatten(jax.tree.structure(params),
+                                           _unflatten_like(g, params)))
+            g2 = np.asarray(split_lib.flat_grad(sim.plan, pert, x, y))
+            w1 = split_lib.flat_params(pert)
+            dw = np.linalg.norm(np.asarray(w1) - np.asarray(w0))
+            lips.append(float(np.linalg.norm(g2 - g) / max(dw, 1e-9)))
+        weights = sim.d_sizes / sim.d_sizes.sum()
+        global_g = np.sum([w * g for w, g in zip(weights, grads)], axis=0)
+        deltas = [float(np.linalg.norm(g - global_g)) for g in grads]
+        return DataStats(np.asarray(sigmas), np.asarray(deltas),
+                         np.maximum(np.asarray(lips), 0.1),
+                         sim.d_tilde.astype(float))
+
+    def train_round(self, sim: "Simulation", trained: List[int],
+                    l_n: np.ndarray,
+                    with_boundary: bool = False) -> Optional[np.ndarray]:
+        sc = sim.scenario
+        models, weights = [], []
+        for m in trained:
+            gw = sim.gateways[m]
+            l_splits = np.asarray([l_n[d.idx] for d in gw.devices])
+            combined, gw_loss, w_m = gw.shop_floor_round(
+                sim.plan, sim.params, sim.ds, l_splits,
+                sc.k_iters, sc.lr, sim.rng)
+            models.append(combined)
+            weights.append(w_m)
+            sim.losses[m] = gw_loss
+        sim.bs.aggregate(models, np.asarray(weights))
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Simulation
+# ---------------------------------------------------------------------------
+
+PolicyLike = Union[str, object, None]
+
+
+class Simulation:
+    """Composable FL simulation over a :class:`Scenario`.
+
+    State is resolved once at construction (topology, dataset, model, layer
+    cost model, per-device statistics); ``rounds()`` then streams
+    :class:`RoundRecord` telemetry one round at a time.
+    """
+
+    def __init__(self, scenario: Scenario,
+                 _stats: Optional[DataStats] = None):
+        self.scenario = sc = scenario
+        self.engine: Engine = make_engine(sc.engine)
+        self.net = Network(sc.net, np.random.default_rng(sc.seed))
+        self.rng = np.random.default_rng(sc.seed + 1)
+        ncfg = self.net.cfg
+
+        # local dataset sizes D_n ~ U(0, 2000]; training batch D~_n = alpha*D_n
+        self.d_sizes = np.maximum(
+            (self.rng.uniform(0, sc.max_dataset, ncfg.n_devices)).astype(int),
+            40)
+        self.d_tilde = np.maximum((sc.alpha * self.d_sizes).astype(int), 4)
+
+        # non-IID classes: gateway 0's devices see the widest variety
+        # (paper Sec. VII-B: "the 1-th gateway ... a wider variety")
+        q = np.zeros(ncfg.n_devices, dtype=int)
+        for n in range(ncfg.n_devices):
+            gw = self.net.assign[n]
+            q[n] = sc.classes if gw == 0 else int(self.rng.integers(1, 4))
+        self.ds = make_fl_dataset(ncfg.n_devices, self.d_sizes, q,
+                                  chi=sc.chi, classes=sc.classes,
+                                  seed=sc.seed)
+
+        # model resolved through the registry + layer-level costs (Table II)
+        key = jax.random.PRNGKey(sc.seed)
+        self.plan, params, self.layers = model_registry.build_fl_model(
+            sc.model, key, sc)
+        self.bs = BaseStation(self.plan, params)
+
+        o = cm.flops_vector(self.layers)
+        g = cm.mem_vector(self.layers, batch=int(self.d_tilde.max()))
+        self.workload = Workload(o, g, cm.model_size_bytes(self.layers),
+                                 sc.k_iters, self.d_tilde.astype(float))
+
+        self.gateways = [
+            Gateway(m, [Device(int(n), m, int(self.d_sizes[n]),
+                               int(self.d_tilde[n]))
+                        for n in self.net.devices_of(m)])
+            for m in range(ncfg.n_gateways)]
+
+        # the scheduler can select at most n_channels gateways per round
+        # (C2/C3), so this many slots always fit every round's participants;
+        # packing into them skips compute for absent devices at fixed shapes.
+        per_gw = int(np.bincount(self.net.assign,
+                                 minlength=ncfg.n_gateways).max())
+        self.cohort_capacity = min(ncfg.n_devices, ncfg.n_channels * per_gw)
+
+        # ``_stats`` (resume fast path) skips the estimation pass entirely —
+        # callers providing it are responsible for also restoring the batch
+        # RNG state, since no estimation draws are consumed.
+        t0 = time.perf_counter()
+        self.stats = _stats if _stats is not None \
+            else self.engine.estimate_stats(self, params)
+        self.stats_seconds = time.perf_counter() - t0  # for fl_round_bench
+        self.phi = divergence_bound(self.stats, self.net.assign,
+                                    sc.lr, sc.k_iters)
+        self.gamma = participation_rates(self.phi, ncfg.n_channels)
+
+        # snapshots for reset(): fresh-Simulation replay of all three streams
+        self._init_params = params
+        self._rng_state0 = self.rng.bit_generator.state
+        self._net_rng_state0 = self.net.rng.bit_generator.state
+
+        self._policy = None
+        self.run_seed = sc.seed   # threaded into stochastic policies
+        self.restart()
+
+    # -- state ----------------------------------------------------------
+
+    @property
+    def params(self):
+        return self.bs.params
+
+    @params.setter
+    def params(self, value):
+        self.bs.params = value
+
+    def restart(self) -> None:
+        """Reset the *run* state (round counter, queues, losses, delay) while
+        keeping params and RNG streams — what a fresh ``run()`` call does."""
+        ncfg = self.net.cfg
+        self.t = 0
+        self.queues = np.zeros(ncfg.n_gateways)
+        self.losses = np.full(ncfg.n_gateways, np.log(self.scenario.classes))
+        self.delay_sum = 0.0
+        self._policy = None
+        self._policy_unresumable = False
+
+    def reset(self, seed: Optional[int] = None) -> "Simulation":
+        """Full reset for fair multi-policy sweeps.
+
+        Restores the model parameters, the batch-sampling RNG **and** the
+        network channel-state RNG together, so every policy run after a
+        ``reset()`` faces the identical ChannelState sequence, data draws and
+        initialization. With ``seed=None`` this replays a fresh
+        ``Simulation(scenario)`` exactly; an explicit ``seed`` re-seeds the
+        run-level streams — params init, batch RNG, channel RNG and the
+        seed threaded into stochastic policies — while the scenario-level
+        structure (topology, deployment, dataset) stays fixed.
+        """
+        if seed is None or seed == self.scenario.seed:
+            self.bs.params = self._init_params
+            self.rng.bit_generator.state = self._rng_state0
+            self.net.rng.bit_generator.state = self._net_rng_state0
+        else:
+            key = jax.random.PRNGKey(seed)
+            _, self.bs.params, _ = model_registry.build_fl_model(
+                self.scenario.model, key, self.scenario)
+            self.rng = np.random.default_rng(seed + 1)
+            self.net.rng = np.random.default_rng(seed)
+        self.run_seed = self.scenario.seed if seed is None else seed
+        self.restart()
+        return self
+
+    # -- policies --------------------------------------------------------
+
+    def _resolve_policy(self, policy: PolicyLike):
+        if policy is None:
+            policy = self.scenario.policy
+        if isinstance(policy, str):
+            return make_policy(policy, seed=self.run_seed)
+        return policy
+
+    # -- the round loop --------------------------------------------------
+
+    def rounds(self, policy: PolicyLike = None, *,
+               boundary: bool = False) -> Iterator[RoundRecord]:
+        """Stream one RoundRecord per remaining round.
+
+        ``policy`` (name or instance) overrides the scenario default; when
+        resuming from a checkpoint the restored policy is kept unless a new
+        one is passed. ``boundary=True`` adds per-device boundary-activation
+        RMS telemetry to each record (one extra fused forward per round).
+        """
+        if policy is not None:
+            self._policy = self._resolve_policy(policy)
+            self._policy_unresumable = False
+        elif self._policy is None:
+            if self._policy_unresumable:
+                raise ValueError(
+                    "this checkpoint was taken with an unregistered custom "
+                    "policy; pass that policy explicitly to rounds()/run() "
+                    "to continue")
+            self._policy = self._resolve_policy(None)
+        while self.t < self.scenario.rounds:
+            yield self._step(self._policy, boundary)
+
+    def _step(self, policy, boundary: bool) -> RoundRecord:
+        sc = self.scenario
+        ncfg = self.net.cfg
+        t = self.t
+        st = self.net.draw()
+        ctx = RoundContext(t, self.workload, self.net, st, self.queues,
+                           self.gamma, sc.v, losses=self.losses.copy())
+        dec: RoundDecision = policy.schedule(ctx)
+        self.queues = dec.queues
+
+        # resolve the schedule into trained gateways + per-device cuts
+        trained, l_n = [], np.zeros(ncfg.n_devices, int)
+        round_delay, failures = 0.0, 0
+        for m in np.where(dec.selected)[0]:
+            j = int(np.argmax(dec.assignment[m]))
+            sol = dec.solutions.get((int(m), j))
+            if sol is None:
+                continue
+            if not sol.feasible or not np.isfinite(sol.delay):
+                failures += 1     # energy/memory violation: round fails
+                continue
+            round_delay = max(round_delay, sol.delay)
+            trained.append(int(m))
+            for i, dev in enumerate(self.gateways[m].devices):
+                l_n[dev.idx] = int(sol.l_split[i])
+
+        rms = self.engine.train_round(self, trained, l_n,
+                                      with_boundary=boundary)
+        self.delay_sum += round_delay
+        self.t = t + 1
+
+        acc = None
+        if (t + 1) % sc.eval_every == 0 or t == sc.rounds - 1:
+            acc = vgg.accuracy(self.plan, self.params,
+                               self.ds.x_test, self.ds.y_test)
+        return RoundRecord(t=t, selected=dec.selected.copy(),
+                           trained=trained, l_n=l_n, delay=round_delay,
+                           cum_delay=self.delay_sum,
+                           queues=self.queues.copy(),
+                           losses=self.losses.copy(), failures=failures,
+                           boundary_rms=rms, accuracy=acc)
+
+    def run(self, policy: PolicyLike = None, *,
+            boundary: bool = False) -> FLResult:
+        """Consume the full round loop into an :class:`FLResult`.
+
+        Restarts the run state (round counter, queues, losses) but keeps the
+        current params/RNG streams, matching the historical ``FLTrainer.run``
+        semantics; call :meth:`reset` first for a from-scratch fair run.
+        """
+        self.restart()
+        records = list(self.rounds(policy, boundary=boundary))
+        return self.result_of(records)
+
+    def result_of(self, records: List[RoundRecord]) -> FLResult:
+        acc = [r.accuracy for r in records if r.accuracy is not None]
+        acc_rounds = [r.t + 1 for r in records if r.accuracy is not None]
+        return FLResult(
+            accuracy=acc, acc_rounds=acc_rounds,
+            cum_delay=[r.cum_delay for r in records],
+            participation=np.asarray([r.selected for r in records]),
+            gamma_targets=self.gamma,
+            losses=[float(np.mean(r.losses)) for r in records],
+            phi=self.phi,
+            failures=sum(r.failures for r in records))
+
+    # -- statistics ------------------------------------------------------
+
+    def estimate_stats(self, params=None,
+                       engine: Optional[str] = None) -> DataStats:
+        """Online estimators for sigma_n, delta_n, L_n (paper Sec. VII-A)."""
+        eng = self.engine if engine is None else make_engine(engine)
+        return eng.estimate_stats(
+            self, self.params if params is None else params)
+
+    # -- checkpointing ---------------------------------------------------
+
+    def save(self, path) -> pathlib.Path:
+        """Checkpoint params + full run state at round ``self.t``."""
+        path = pathlib.Path(path)
+        store.save_pytree(path, self.params, step=self.t)
+        pol = None
+        if self._policy is not None:
+            name = getattr(self._policy, "name", None)
+            # only registered names can be reconstructed at resume time; a
+            # custom instance is recorded as such so resume can refuse to
+            # silently swap in the scenario default mid-experiment.
+            pol = {"name": name if name in POLICIES else None,
+                   "state": policy_state(self._policy)}
+        state = {
+            "scenario": self.scenario.to_json(),
+            "t": self.t,
+            "run_seed": self.run_seed,
+            "queues": self.queues.tolist(),
+            "losses": self.losses.tolist(),
+            "delay_sum": self.delay_sum,
+            "rng": self.rng.bit_generator.state,
+            "net_rng": self.net.rng.bit_generator.state,
+            # stats with exact dtypes: phi/gamma recomputation at resume is
+            # then bit-identical, and the estimation pass can be skipped.
+            "stats": {f.name: _arr_to_json(getattr(self.stats, f.name))
+                      for f in dataclasses.fields(self.stats)},
+            "policy": pol,
+        }
+        fname = path / f"sim_{self.t:08d}.json"
+        fname.write_text(json.dumps(state))
+        return fname
+
+    @classmethod
+    def resume(cls, path) -> "Simulation":
+        """Rebuild a Simulation from the latest checkpoint in ``path``.
+
+        The scenario is re-resolved deterministically (topology, dataset;
+        the per-device statistics come straight from the manifest, skipping
+        the estimation pass), then params and every RNG/queue/loss/policy
+        stream are restored, so the continued round loop is bit-identical
+        to an uninterrupted run.
+        """
+        path = pathlib.Path(path)
+        step = store.latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+        state = json.loads((path / f"sim_{step:08d}.json").read_text())
+        stats = None
+        if "stats" in state:
+            stats = DataStats(**{k: _arr_from_json(v)
+                                 for k, v in state["stats"].items()})
+        sim = cls(Scenario.from_json(state["scenario"]), _stats=stats)
+        sim.params = store.load_pytree(path / f"step_{step:08d}.npz",
+                                       like=sim.params)
+        sim.t = state["t"]
+        sim.run_seed = state.get("run_seed", sim.scenario.seed)
+        sim.queues = np.asarray(state["queues"])
+        sim.losses = np.asarray(state["losses"])
+        sim.delay_sum = state["delay_sum"]
+        sim.rng.bit_generator.state = state["rng"]
+        sim.net.rng.bit_generator.state = state["net_rng"]
+        pol = state.get("policy")
+        if pol:
+            if pol.get("name"):
+                sim._policy = make_policy(pol["name"], seed=sim.run_seed)
+                set_policy_state(sim._policy, pol.get("state"))
+            else:
+                sim._policy_unresumable = True
+        return sim
+
+
+def _arr_to_json(a: np.ndarray) -> dict:
+    a = np.asarray(a)
+    return {"data": a.tolist(), "dtype": str(a.dtype)}
+
+
+def _arr_from_json(d: dict) -> np.ndarray:
+    return np.asarray(d["data"], dtype=d["dtype"])
+
+
+def _unflatten_like(flat: np.ndarray, tree):
+    """Split a flat vector back into leaves shaped like ``tree``."""
+    leaves = jax.tree.leaves(tree)
+    out, i = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(np.asarray(flat[i:i + n]).reshape(leaf.shape)
+                   .astype(leaf.dtype))
+        i += n
+    return out

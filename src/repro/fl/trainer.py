@@ -1,35 +1,30 @@
-"""End-to-end FL simulation: scheduler in the loop, real JAX training.
+"""Deprecated FLTrainer/FLConfig shim over ``repro.fl.sim``.
 
-Wires together the network/energy environment (repro.core.network), the
-DDSRA scheduler or a baseline (repro.core.schedulers), the layer-level cost
-model (repro.core.costmodel) and real split training (repro.fl.split) into
-the paper's two-tier FL loop.
+The FL simulation surface moved to the composable Scenario / Policy / Engine
+API in ``repro.fl.sim`` (see ``src/repro/fl/README.md`` for the migration
+table). This module keeps the historical ``FLTrainer(FLConfig(...)).run()``
+entry point working by delegating every attribute to an underlying
+:class:`repro.fl.sim.Simulation`, so existing call sites — including ones
+that poke trainer internals like ``tr.bs.params = ...`` or ``tr.rng = ...``
+— behave exactly as before.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
-import jax
 import numpy as np
 
-from repro.core import costmodel as cm
-from repro.core.ddsra import Workload
-from repro.core.network import Network, NetworkConfig
-from repro.core.participation import (DataStats, divergence_bound,
-                                      participation_rates)
-from repro.core.schedulers import SCHEDULERS, RoundContext
-from repro.fl import cohort as cohort_lib
-from repro.fl import split as split_lib
-from repro.fl.data import (FLDataset, make_fl_dataset, sample_batch,
-                           sample_cohort_batch)
-from repro.fl.roles import BaseStation, Device, Gateway, fedavg
-from repro.models import vgg
+from repro.core.network import NetworkConfig
+from repro.fl.sim import FLResult, Scenario, Simulation, make_engine
+
+__all__ = ["FLConfig", "FLResult", "FLTrainer"]
 
 
 @dataclasses.dataclass
 class FLConfig:
+    """Deprecated: use ``repro.fl.sim.Scenario`` (same fields, plus the
+    network config embedded as ``net`` and ``scheduler`` renamed ``policy``)."""
     model: str = "vgg"            # vgg | mlp
     width_mult: float = 0.25
     classes: int = 10
@@ -47,252 +42,60 @@ class FLConfig:
     engine: str = "cohort"        # cohort (fused/jitted) | sequential (seed)
     boundary_telemetry: bool = False  # per-device boundary-activation RMS
 
-
-@dataclasses.dataclass
-class FLResult:
-    accuracy: List[float]
-    acc_rounds: List[int]
-    cum_delay: List[float]
-    participation: np.ndarray     # (T, M)
-    gamma_targets: np.ndarray
-    losses: List[float]
-    phi: np.ndarray
-    failures: int
+    def to_scenario(self, net_cfg: Optional[NetworkConfig] = None) -> Scenario:
+        return Scenario(
+            model=self.model, width_mult=self.width_mult,
+            classes=self.classes, k_iters=self.k_iters, lr=self.lr,
+            alpha=self.alpha, rounds=self.rounds, v=self.v,
+            policy=self.scheduler, seed=self.seed,
+            eval_every=self.eval_every, max_dataset=self.max_dataset,
+            chi=self.chi, sigma_samples=self.sigma_samples,
+            engine=self.engine, net=net_cfg or NetworkConfig())
 
 
 class FLTrainer:
+    """Deprecated facade over :class:`repro.fl.sim.Simulation`."""
+
     def __init__(self, cfg: FLConfig, net_cfg: Optional[NetworkConfig] = None):
         self.cfg = cfg
-        self.net = Network(net_cfg or NetworkConfig(),
-                           np.random.default_rng(cfg.seed))
-        self.rng = np.random.default_rng(cfg.seed + 1)
-        ncfg = self.net.cfg
-
-        # local dataset sizes D_n ~ U(0, 2000]; training batch D~_n = alpha*D_n
-        self.d_sizes = np.maximum(
-            (self.rng.uniform(0, cfg.max_dataset, ncfg.n_devices)).astype(int), 40)
-        self.d_tilde = np.maximum((cfg.alpha * self.d_sizes).astype(int), 4)
-
-        # non-IID classes: gateway 0's devices see the widest variety
-        # (paper Sec. VII-B: "the 1-th gateway ... a wider variety")
-        q = np.zeros(ncfg.n_devices, dtype=int)
-        for n in range(ncfg.n_devices):
-            gw = self.net.assign[n]
-            q[n] = cfg.classes if gw == 0 else int(self.rng.integers(1, 4))
-        self.ds = make_fl_dataset(ncfg.n_devices, self.d_sizes, q,
-                                  chi=cfg.chi, classes=cfg.classes,
-                                  seed=cfg.seed)
-
-        # model + layer-level costs (paper Table II)
-        key = jax.random.PRNGKey(cfg.seed)
-        if cfg.model == "vgg":
-            self.plan, params = vgg.init_vgg11(key, cfg.width_mult, cfg.classes)
-            self.layers = cm.vgg11_layers(cfg.width_mult, classes=cfg.classes)
-        else:
-            sizes = (3072, 128, 64, cfg.classes)
-            self.plan, params = vgg.init_mlp(key, sizes)
-            self.layers = vgg.mlp_layer_costs(sizes)
-        self.bs = BaseStation(self.plan, params)
-
-        o = cm.flops_vector(self.layers)
-        g = cm.mem_vector(self.layers, batch=int(self.d_tilde.max()))
-        self.workload = Workload(o, g, cm.model_size_bytes(self.layers),
-                                 cfg.k_iters, self.d_tilde.astype(float))
-
-        self.gateways = [
-            Gateway(m, [Device(int(n), m, int(self.d_sizes[n]), int(self.d_tilde[n]))
-                        for n in self.net.devices_of(m)])
-            for m in range(ncfg.n_gateways)]
-
-        # the scheduler can select at most n_channels gateways per round
-        # (C2/C3), so this many slots always fit every round's participants;
-        # packing into them skips compute for absent devices at fixed shapes.
-        per_gw = int(np.bincount(self.net.assign,
-                                 minlength=ncfg.n_gateways).max())
-        self.cohort_capacity = min(ncfg.n_devices, ncfg.n_channels * per_gw)
-
+        self.sim = Simulation(cfg.to_scenario(net_cfg))
         self.last_boundary_rms: Optional[np.ndarray] = None
-        t0 = time.perf_counter()
-        self.stats = self.estimate_stats(params)
-        self.stats_seconds = time.perf_counter() - t0  # for fl_round_bench
-        self.phi = divergence_bound(self.stats, self.net.assign,
-                                    cfg.lr, cfg.k_iters)
-        self.gamma = participation_rates(self.phi, ncfg.n_channels)
 
-    # ------------------------------------------------------------------
-    def estimate_stats(self, params, engine: Optional[str] = None) -> DataStats:
-        """Online estimators for sigma_n, delta_n, L_n (paper Sec. VII-A).
+    # every piece of historical trainer state delegates to the Simulation,
+    # so external mutation (tr.rng = ..., tr.bs.params = ...) stays visible
+    # to the round loop.
+    _DELEGATED = ("net", "rng", "ds", "d_sizes", "d_tilde", "plan", "layers",
+                  "bs", "workload", "gateways", "cohort_capacity", "stats",
+                  "stats_seconds", "phi", "gamma")
 
-        The cohort engine computes all devices' statistics in one jitted
-        vmap-of-vmap per-sample-grad program; "sequential" keeps the seed's
-        O(devices x samples) loop as the parity/benchmark reference.
-        """
-        if _check_engine(engine or self.cfg.engine) == "sequential":
-            return self._estimate_stats_sequential(params)
-        cfg = self.cfg
-        n_dev = self.net.cfg.n_devices
-        batch = sample_cohort_batch(self.rng, self.ds, range(n_dev),
-                                    self.d_tilde, int(self.d_tilde.max()))
-        mix = self.d_sizes / self.d_sizes.sum()
-        sigma, delta, lips = cohort_lib.cohort_stats(
-            self.plan, params, batch, mix, cfg.lr, cfg.sigma_samples)
-        return DataStats(np.asarray(sigma), np.asarray(delta),
-                         np.maximum(np.asarray(lips), 0.1),
-                         self.d_tilde.astype(float))
+    def __getattr__(self, name):
+        if name in FLTrainer._DELEGATED:
+            return getattr(self.sim, name)
+        raise AttributeError(name)
 
-    def _estimate_stats_sequential(self, params) -> DataStats:
-        cfg = self.cfg
-        n_dev = self.net.cfg.n_devices
-        grads, sigmas, lips = [], [], []
-        for n in range(n_dev):
-            x, y = sample_batch(self.rng, self.ds, n, self.d_tilde[n])
-            g = np.asarray(split_lib.flat_grad(self.plan, params, x, y))
-            grads.append(g)
-            # sigma: per-sample gradient spread
-            m_s = min(cfg.sigma_samples, len(y))
-            per = [np.asarray(split_lib.flat_grad(self.plan, params,
-                                                  x[i:i + 1], y[i:i + 1]))
-                   for i in range(m_s)]
-            mean_g = np.mean(per, axis=0)
-            sigmas.append(float(np.mean([np.linalg.norm(p - mean_g) for p in per])))
-            # L_n: two-point secant
-            w0 = split_lib.flat_params(params)
-            pert = jax.tree.map(
-                lambda p_, gg: p_ - cfg.lr * gg,
-                params, jax.tree.unflatten(jax.tree.structure(params),
-                                           _unflatten_like(g, params)))
-            g2 = np.asarray(split_lib.flat_grad(self.plan, pert, x, y))
-            w1 = split_lib.flat_params(pert)
-            dw = np.linalg.norm(np.asarray(w1) - np.asarray(w0))
-            lips.append(float(np.linalg.norm(g2 - g) / max(dw, 1e-9)))
-        weights = self.d_sizes / self.d_sizes.sum()
-        global_g = np.sum([w * g for w, g in zip(weights, grads)], axis=0)
-        deltas = [float(np.linalg.norm(g - global_g)) for g in grads]
-        return DataStats(np.asarray(sigmas), np.asarray(deltas),
-                         np.maximum(np.asarray(lips), 0.1),
-                         self.d_tilde.astype(float))
+    def __setattr__(self, name, value):
+        if name in FLTrainer._DELEGATED:
+            setattr(self.sim, name, value)
+        else:
+            object.__setattr__(self, name, value)
 
-    # ------------------------------------------------------------------
+    def estimate_stats(self, params, engine: Optional[str] = None):
+        return self.sim.estimate_stats(params, engine=engine)
+
     def run(self, scheduler_name: Optional[str] = None,
             engine: Optional[str] = None) -> FLResult:
-        cfg = self.cfg
-        ncfg = self.net.cfg
-        engine = _check_engine(engine or cfg.engine)
-        name = scheduler_name or cfg.scheduler
-        sched_cls = SCHEDULERS[name]
-        scheduler = sched_cls() if name != "random" else sched_cls(cfg.seed)
-
-        queues = np.zeros(ncfg.n_gateways)
-        losses = np.full(ncfg.n_gateways, np.log(cfg.classes))
-        acc, acc_rounds, cum_delay, parts, loss_hist = [], [], [], [], []
-        delay_sum, failures = 0.0, 0
-
-        for t in range(cfg.rounds):
-            st = self.net.draw()
-            ctx = RoundContext(t, self.workload, self.net, st, queues,
-                               self.gamma, cfg.v, losses=losses.copy())
-            dec = scheduler.schedule(ctx)
-            queues = dec.queues
-            parts.append(dec.selected.copy())
-
-            # resolve the schedule into trained gateways + per-device cuts
-            trained, l_n = [], np.zeros(ncfg.n_devices, int)
-            round_delay = 0.0
-            for m in np.where(dec.selected)[0]:
-                j = int(np.argmax(dec.assignment[m]))
-                sol = dec.solutions.get((int(m), j))
-                if sol is None:
-                    continue
-                if not sol.feasible or not np.isfinite(sol.delay):
-                    failures += 1     # energy/memory violation: round fails
-                    continue
-                round_delay = max(round_delay, sol.delay)
-                trained.append(int(m))
-                for i, dev in enumerate(self.gateways[m].devices):
-                    l_n[dev.idx] = int(sol.l_split[i])
-
-            if engine == "sequential":
-                self._sequential_round(trained, l_n, losses)
-            elif trained:
-                self._cohort_round(trained, l_n, losses)
-            delay_sum += round_delay
-            cum_delay.append(delay_sum)
-            loss_hist.append(float(np.mean(losses)))
-
-            if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-                acc.append(vgg.accuracy(self.plan, self.bs.params,
-                                        self.ds.x_test, self.ds.y_test))
-                acc_rounds.append(t + 1)
-
-        return FLResult(acc, acc_rounds, cum_delay, np.asarray(parts),
-                        self.gamma, loss_hist, self.phi, failures)
-
-    # ------------------------------------------------------------------
-    def _sequential_round(self, trained: List[int], l_n: np.ndarray,
-                          losses: np.ndarray) -> None:
-        """Seed per-device Python loop (kept as the parity/bench reference)."""
-        cfg = self.cfg
-        models, weights = [], []
-        for m in trained:
-            gw = self.gateways[m]
-            l_splits = np.asarray([l_n[d.idx] for d in gw.devices])
-            combined, gw_loss, w_m = gw.shop_floor_round(
-                self.plan, self.bs.params, self.ds, l_splits,
-                cfg.k_iters, cfg.lr, self.rng)
-            models.append(combined)
-            weights.append(w_m)
-            losses[m] = gw_loss
-        self.bs.aggregate(models, np.asarray(weights))
-
-    def _cohort_round(self, trained: List[int], l_n: np.ndarray,
-                      losses: np.ndarray) -> None:
-        """One fused XLA program for the whole (devices x K epochs) round,
-        FedAvg included; a single host sync reads the per-gateway losses.
-        Participants are packed into ``cohort_capacity`` fixed slots."""
-        cfg = self.cfg
-        device_ids: List[int] = []
-        for m in trained:
-            device_ids.extend(dev.idx for dev in self.gateways[m].devices)
-        # capacity always fits a schedulable round; fall back to the all-
-        # devices layout (one extra compile, same numerics) if it ever won't
-        cap = self.cohort_capacity if len(device_ids) <= self.cohort_capacity \
-            else self.net.cfg.n_devices
-        l_slot = np.zeros(cap, int)
-        w_slot = np.zeros(cap, np.float32)
-        slot_gw = np.zeros((cap, self.net.cfg.n_gateways), np.float32)
-        for s, n in enumerate(device_ids):
-            l_slot[s] = l_n[n]
-            w_slot[s] = self.d_tilde[n]
-            slot_gw[s, self.net.assign[n]] = 1.0
-        batch = sample_cohort_batch(self.rng, self.ds, device_ids,
-                                    self.d_tilde, int(self.d_tilde.max()),
-                                    capacity=cap)
-        new_global, gw_loss, _, _, boundary = cohort_lib.cohort_round(
-            self.plan, self.bs.params, batch, l_slot, w_slot, slot_gw,
-            cfg.k_iters, cfg.lr, with_boundary=cfg.boundary_telemetry)
-        self.bs.params = new_global
-        if cfg.boundary_telemetry:
-            rms = np.zeros(self.net.cfg.n_devices)
-            rms[device_ids] = np.asarray(boundary)[:len(device_ids)]
-            self.last_boundary_rms = rms
-        gw_loss = np.asarray(gw_loss)
-        for m in trained:
-            losses[m] = float(gw_loss[m])
-
-
-def _check_engine(engine: str) -> str:
-    if engine not in ("cohort", "sequential"):
-        raise ValueError(f"unknown engine {engine!r}: "
-                         f"expected 'cohort' or 'sequential'")
-    return engine
-
-
-def _unflatten_like(flat: np.ndarray, tree):
-    """Split a flat vector back into leaves shaped like ``tree``."""
-    leaves = jax.tree.leaves(tree)
-    out, i = [], 0
-    for leaf in leaves:
-        n = leaf.size
-        out.append(np.asarray(flat[i:i + n]).reshape(leaf.shape).astype(leaf.dtype))
-        i += n
-    return out
+        old_engine = self.sim.engine
+        if engine is not None:
+            self.sim.engine = make_engine(engine)
+        try:
+            if not self.cfg.boundary_telemetry:
+                return self.sim.run(scheduler_name)
+            self.sim.restart()
+            records: List = []
+            for rec in self.sim.rounds(scheduler_name, boundary=True):
+                records.append(rec)
+                if rec.boundary_rms is not None:
+                    self.last_boundary_rms = rec.boundary_rms
+            return self.sim.result_of(records)
+        finally:
+            self.sim.engine = old_engine

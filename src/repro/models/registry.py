@@ -1,8 +1,15 @@
-"""Model registry: arch-id -> (template, init, apply, serve) bundle."""
+"""Model registries.
+
+* arch-id -> (template, init, apply, serve) bundle for the LLM stack;
+* FL split-model registry: name -> builder producing the ``(plan, params,
+  layer costs)`` triple the FL simulation consumes, replacing the
+  ``if model == "vgg"`` string dispatch that was duplicated across the
+  trainer, examples and benchmarks.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +51,49 @@ def bundle_for(cfg: ArchConfig) -> ModelBundle:
 def get_bundle(arch: str, smoke: bool = False) -> ModelBundle:
     cfg = cfg_lib.get_smoke_config(arch) if smoke else cfg_lib.get_config(arch)
     return bundle_for(cfg)
+
+
+# ---------------------------------------------------------------------------
+# FL split-model registry
+# ---------------------------------------------------------------------------
+
+# name -> builder(key, spec) -> (plan, params, List[LayerCost]).  ``spec`` is
+# any object exposing the scenario fields the builder needs (width_mult,
+# classes, mlp_hidden, ...) — typically ``repro.fl.sim.Scenario``.
+FL_MODELS: Dict[str, Callable[..., Tuple[Any, Any, Any]]] = {}
+
+
+def register_fl_model(name: str):
+    """Decorator registering an FL split-model builder; duplicates raise."""
+    def deco(fn):
+        if name in FL_MODELS:
+            raise ValueError(f"FL model {name!r} already registered")
+        FL_MODELS[name] = fn
+        return fn
+    return deco
+
+
+def build_fl_model(name: str, key: jax.Array, spec) -> Tuple[Any, Any, Any]:
+    """Resolve + build ``name`` -> (plan, params, layer costs)."""
+    if name not in FL_MODELS:
+        raise KeyError(f"unknown FL model {name!r}; known: {sorted(FL_MODELS)}")
+    return FL_MODELS[name](key, spec)
+
+
+@register_fl_model("vgg")
+def _build_vgg(key: jax.Array, spec):
+    from repro.core import costmodel as cm
+    from repro.models import vgg
+    plan, params = vgg.init_vgg11(key, spec.width_mult, spec.classes)
+    return plan, params, cm.vgg11_layers(spec.width_mult, classes=spec.classes)
+
+
+@register_fl_model("mlp")
+def _build_mlp(key: jax.Array, spec):
+    from repro.models import vgg
+    sizes = (3072, *getattr(spec, "mlp_hidden", (128, 64)), spec.classes)
+    plan, params = vgg.init_mlp(key, sizes)
+    return plan, params, vgg.mlp_layer_costs(sizes)
 
 
 def demo_batch(cfg: ArchConfig, batch: int, seq: int, rng=None,

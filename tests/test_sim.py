@@ -1,0 +1,316 @@
+"""Composable simulation API: Scenario/Policy/Engine registries, fair-sweep
+reset semantics, streaming round telemetry, checkpoint-resume bit-identity
+and the FLTrainer deprecation shim."""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.network import NetworkConfig
+from repro.core.schedulers import POLICIES, make_policy, register_policy
+from repro.fl import (FLConfig, FLTrainer, Scenario, Simulation, make_engine,
+                      register_engine)
+from repro.models import registry as model_registry
+
+
+def _scenario(**kw):
+    base = dict(model="mlp", rounds=4, eval_every=2, seed=0)
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_policy_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("ddsra")(object)
+    assert POLICIES["ddsra"].cls is not object   # registry untouched
+
+
+def test_duplicate_fl_model_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        model_registry.register_fl_model("vgg")(lambda key, spec: None)
+
+
+def test_duplicate_engine_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_engine("cohort")(object)
+
+
+def test_unknown_names_raise():
+    with pytest.raises(KeyError):
+        make_policy("nope")
+    with pytest.raises(ValueError):
+        make_engine("nope")
+    with pytest.raises(KeyError):
+        model_registry.build_fl_model("nope", jax.random.PRNGKey(0), None)
+
+
+def test_registry_seed_threading_is_declarative():
+    """Stochastic policies get their seed via registry kwargs, not by
+    name-matching at the call site — same seed, same schedule."""
+    assert "seed" in POLICIES["random"].kwargs
+    a = make_policy("random", seed=123)
+    b = make_policy("random", seed=123)
+    draws_a = [a.rng.integers(0, 100) for _ in range(5)]
+    draws_b = [b.rng.integers(0, 100) for _ in range(5)]
+    assert draws_a == draws_b
+    # deterministic policies simply ignore the offered context
+    make_policy("round_robin", seed=123)
+
+
+def test_fl_model_registry_resolves_plan_and_costs():
+    sc = _scenario()
+    plan, params, layers = model_registry.build_fl_model(
+        "mlp", jax.random.PRNGKey(0), sc)
+    assert len(plan) == len(params) == len(layers) == 3
+    plan_v, params_v, layers_v = model_registry.build_fl_model(
+        "vgg", jax.random.PRNGKey(0), sc)
+    assert len(plan_v) == len(params_v) == len(layers_v)
+
+
+# ---------------------------------------------------------------------------
+# scenario serialization
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_json_roundtrip():
+    sc = _scenario(model="vgg", width_mult=0.125, mlp_hidden=(32, 16),
+                   net=NetworkConfig(n_gateways=4, n_devices=8))
+    rt = Scenario.from_json(json.loads(json.dumps(sc.to_json())))
+    assert rt == sc
+    assert isinstance(rt.net.dist_range, tuple)
+    assert dataclasses.asdict(rt) == dataclasses.asdict(sc)
+
+
+# ---------------------------------------------------------------------------
+# fair-sweep reset
+# ---------------------------------------------------------------------------
+
+
+def test_reset_replays_identical_channel_draws():
+    """Regression for the unfair-sweep bug: resetting params/batch RNG but
+    not the Network RNG compared policies on different channel sequences."""
+    sim = Simulation(_scenario())
+    sim.run("ddsra")                       # advance all three streams
+    sim.reset()
+    draws1 = [sim.net.draw() for _ in range(3)]
+    sim.reset()
+    draws2 = [sim.net.draw() for _ in range(3)]
+    for a, b in zip(draws1, draws2):
+        for f in dataclasses.fields(a):
+            np.testing.assert_array_equal(getattr(a, f.name),
+                                          getattr(b, f.name))
+
+
+def test_reset_makes_runs_bit_identical():
+    sim = Simulation(_scenario())
+    first = sim.run("random")
+    sim.reset()
+    again = sim.run("random")
+    assert first.losses == again.losses
+    assert first.cum_delay == again.cum_delay
+    assert first.accuracy == again.accuracy
+    np.testing.assert_array_equal(first.participation, again.participation)
+
+
+def test_reset_seed_threads_into_stochastic_policies():
+    """Replicate sweeps: reset(seed=s) must decorrelate the random baseline
+    across seeds (the policy seed follows the run seed, not scenario.seed)."""
+    sim = Simulation(_scenario(rounds=6))
+    schedules = []
+    for s in (0, 1, 2):
+        sim.reset(seed=s)
+        res = sim.run("random")
+        schedules.append(res.participation)
+    assert not np.array_equal(schedules[0], schedules[1]) or \
+        not np.array_equal(schedules[0], schedules[2])
+    # and the same replicate seed replays the same schedule
+    sim.reset(seed=1)
+    again = sim.run("random")
+    np.testing.assert_array_equal(schedules[1], again.participation)
+    # plain reset() returns to the scenario seed
+    sim.reset()
+    assert sim.run_seed == sim.scenario.seed
+
+
+def test_fresh_simulation_equals_reset_run():
+    sc = _scenario()
+    fresh = Simulation(sc).run("ddsra")
+    sim = Simulation(sc)
+    sim.run("random")
+    sim.reset()
+    rerun = sim.run("ddsra")
+    assert fresh.losses == rerun.losses
+    assert fresh.cum_delay == rerun.cum_delay
+
+
+# ---------------------------------------------------------------------------
+# streaming rounds / telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_rounds_streams_records_with_telemetry():
+    sim = Simulation(_scenario())
+    recs = list(sim.rounds("ddsra", boundary=True))
+    assert [r.t for r in recs] == [0, 1, 2, 3]
+    m = sim.net.cfg.n_gateways
+    for r in recs:
+        assert r.selected.shape == (m,) and r.queues.shape == (m,)
+        assert r.losses.shape == (m,) and r.delay >= 0
+        if r.trained:
+            rms = r.boundary_rms
+            assert rms is not None and rms.shape == (sim.net.cfg.n_devices,)
+            trained_devs = [d.idx for mm in r.trained
+                            for d in sim.gateways[mm].devices]
+            assert (rms[trained_devs] > 0).all()
+    assert recs[1].accuracy is not None and recs[3].accuracy is not None
+    assert recs[0].accuracy is None
+    # run() is a thin consumer of the same stream
+    res = sim.result_of(recs)
+    assert res.cum_delay == [r.cum_delay for r in recs]
+    assert res.accuracy == [recs[1].accuracy, recs[3].accuracy]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-resume
+# ---------------------------------------------------------------------------
+
+
+def _records_equal(a, b):
+    assert a.t == b.t and a.delay == b.delay and a.failures == b.failures
+    assert a.cum_delay == b.cum_delay and a.accuracy == b.accuracy
+    np.testing.assert_array_equal(a.selected, b.selected)
+    np.testing.assert_array_equal(a.queues, b.queues)
+    np.testing.assert_array_equal(a.losses, b.losses)
+    np.testing.assert_array_equal(a.l_n, b.l_n)
+
+
+@pytest.mark.parametrize("engine,policy", [("cohort", "random"),
+                                           ("sequential", "ddsra")])
+def test_checkpoint_resume_bit_identical(engine, policy, tmp_path):
+    """A run checkpointed at round t and resumed matches an uninterrupted
+    run record-for-record, including the final parameters."""
+    sc = _scenario(rounds=6, eval_every=3, engine=engine)
+    uninterrupted = Simulation(sc)
+    full = list(uninterrupted.rounds(policy))
+
+    sim = Simulation(sc)
+    it = sim.rounds(policy)
+    head = [next(it) for _ in range(3)]
+    sim.save(tmp_path)
+    resumed = Simulation.resume(tmp_path)
+    assert resumed.t == 3
+    tail = list(resumed.rounds())        # keeps the restored policy
+    assert len(head) + len(tail) == len(full)
+    for a, b in zip(full, head + tail):
+        _records_equal(a, b)
+    for x, y in zip(jax.tree.leaves(uninterrupted.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_without_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Simulation.resume(tmp_path)
+
+
+def test_resume_skips_stats_estimation_and_matches(tmp_path):
+    sim = Simulation(_scenario())
+    next(sim.rounds("ddsra"))
+    sim.save(tmp_path)
+    resumed = Simulation.resume(tmp_path)
+    assert resumed.stats_seconds < sim.stats_seconds / 10
+    for f in dataclasses.fields(sim.stats):
+        got, want = getattr(resumed.stats, f.name), getattr(sim.stats, f.name)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(resumed.gamma, sim.gamma)
+    np.testing.assert_array_equal(resumed.phi, sim.phi)
+
+
+def test_resume_with_custom_policy_refuses_silent_swap(tmp_path):
+    """A checkpoint taken under an unregistered policy instance must not
+    silently continue with the scenario default."""
+    class Greedy:
+        def schedule(self, ctx):
+            return make_policy("round_robin").schedule(ctx)
+
+    sim = Simulation(_scenario())
+    it = sim.rounds(Greedy())
+    next(it)
+    sim.save(tmp_path)
+    resumed = Simulation.resume(tmp_path)
+    with pytest.raises(ValueError, match="custom policy"):
+        next(resumed.rounds())
+    # passing the policy explicitly continues fine
+    recs = list(resumed.rounds(Greedy()))
+    assert [r.t for r in recs] == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# FLTrainer shim
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_shim_matches_simulation():
+    cfg = FLConfig(model="mlp", rounds=4, eval_every=2, seed=0)
+    res_sim = Simulation(cfg.to_scenario()).run()
+    res_shim = FLTrainer(cfg).run()
+    assert res_shim.accuracy == res_sim.accuracy
+    assert res_shim.losses == res_sim.losses
+    assert res_shim.cum_delay == res_sim.cum_delay
+    np.testing.assert_array_equal(res_shim.participation,
+                                  res_sim.participation)
+
+
+def test_trainer_shim_internals_stay_mutable():
+    """Legacy sweep idiom: poking tr.bs.params / tr.rng must still reach the
+    underlying simulation (the shim shares state, not copies)."""
+    tr = FLTrainer(FLConfig(model="mlp", rounds=2, eval_every=2, seed=0))
+    fresh = np.random.default_rng(1)
+    tr.rng = fresh
+    assert tr.sim.rng is fresh
+    tr.bs.params = tr.sim._init_params
+    assert tr.sim.params is tr.sim._init_params
+    assert tr.gamma is tr.sim.gamma
+
+
+def test_trainer_shim_boundary_telemetry():
+    tr = FLTrainer(FLConfig(model="mlp", rounds=2, eval_every=2, seed=0,
+                            boundary_telemetry=True))
+    tr.run("ddsra")
+    assert tr.last_boundary_rms is not None
+    assert tr.last_boundary_rms.shape == (tr.net.cfg.n_devices,)
+
+
+# ---------------------------------------------------------------------------
+# fig2 path: fused shop-floor round surfaces per-gateway models
+# ---------------------------------------------------------------------------
+
+
+def test_shop_floor_round_matches_sequential_gateways():
+    sim = Simulation(_scenario(rounds=1))
+    device_ids = [dev.idx for gw in sim.gateways for dev in gw.devices]
+    l_n = np.full(sim.net.cfg.n_devices, len(sim.plan) // 2, dtype=int)
+
+    _, gw_models, gw_loss, _ = sim.engine.shop_floor_round(
+        sim, device_ids, l_n, params=sim.params,
+        rng=np.random.default_rng(17))
+
+    rng = np.random.default_rng(17)
+    for m, gw in enumerate(sim.gateways):
+        l_splits = np.asarray([l_n[d.idx] for d in gw.devices])
+        combined, loss, _ = gw.shop_floor_round(
+            sim.plan, sim.params, sim.ds, l_splits,
+            sim.scenario.k_iters, sim.scenario.lr, rng)
+        got = [{k: np.asarray(a[m]) for k, a in layer.items()}
+               for layer in gw_models]
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(combined)):
+            np.testing.assert_allclose(a, np.asarray(b), atol=1e-5)
+        assert float(gw_loss[m]) == pytest.approx(loss, abs=1e-4)
