@@ -17,8 +17,19 @@ the seed did not have. Measured against the untouched seed commit, the same
 simulation is >5x slower than the cohort engine on a 2-core CPU box (seed
 32.8s vs cohort 5.0s when this bench was written); the emitted speedup vs
 the improved in-tree sequential path is the lower bound.
+
+Part two sweeps cohort scale: {20, 64, 128} devices x engine
+(single-width cohort, 4-tier cohort, 4-tier sharded cohort), reporting
+per-round wall time and the padded-vs-real sample ratio — the tiered slot
+layout recovers most of the batch-padding waste of the single-width
+contract, and the sharded engine splits the slot axis over the
+``"cohort"`` mesh (1 device on the CPU dev box; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to see an actual
+mesh).
 """
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import emit, save_json, timed
 from repro.core.network import NetworkConfig
@@ -26,6 +37,11 @@ from repro.fl import Scenario, Simulation
 from repro.fl import cohort as cohort_lib
 
 ROUNDS, DEVICES, GATEWAYS = 10, 20, 5
+
+# (n_devices, n_gateways, n_channels) for the scaling sweep
+SCALE_SWEEP = [(20, 5, 3), (64, 8, 4), (128, 16, 8)]
+# (engine, tiers) variants: single-width cohort is the historical contract
+SCALE_ENGINES = [("cohort", 1), ("cohort", 4), ("sharded", 4)]
 
 
 def _simulate(engine: str):
@@ -36,6 +52,38 @@ def _simulate(engine: str):
     with timed() as t_run:
         res = sim.run("ddsra")
     return sim.stats_seconds, t_run["s"], res
+
+
+def _scale_run(n_dev: int, n_gw: int, n_ch: int, engine: str, tiers: int,
+               rounds: int):
+    """One sweep point: short ddsra-scheduled sim at the given scale.
+
+    Rounds are timed individually; ``round_ms`` is the mean over the
+    steady-state rounds (the first round pays XLA compilation and the last
+    pays the accuracy eval, so both are excluded)."""
+    sc = Scenario(model="mlp", rounds=rounds, eval_every=rounds + 1, seed=0,
+                  engine=engine, tiers=tiers, alpha=0.2, max_dataset=250,
+                  net=NetworkConfig(n_gateways=n_gw, n_devices=n_dev,
+                                    n_channels=n_ch))
+    sim = Simulation(sc)
+    per_round, records = [], []
+    it = sim.rounds("ddsra")
+    for _ in range(rounds):
+        with timed() as t:
+            records.append(next(it))
+        per_round.append(t["s"])
+    steady = per_round[1:-1] if rounds > 2 else per_round[-1:]
+    real = sim.padding_stats["real_samples"]
+    padded = sim.padding_stats["padded_samples"]
+    return {
+        "devices": n_dev, "engine": engine, "tiers": tiers,
+        "rounds": rounds, "stats_s": sim.stats_seconds,
+        "run_s": sum(per_round), "compile_round_s": per_round[0],
+        "round_ms": sum(steady) * 1e3 / len(steady),
+        "real_samples": real, "padded_samples": padded,
+        "pad_ratio": padded / max(real, 1.0),
+        "final_loss": float(np.mean(records[-1].losses)),
+    }
 
 
 def main(fast: bool = True) -> None:
@@ -65,12 +113,40 @@ def main(fast: bool = True) -> None:
     # both engines must tell the same training story (parity is pinned
     # tightly in tests/test_cohort.py; this guards the bench itself)
     assert abs(seq_res.accuracy[-1] - co_res.accuracy[-1]) < 0.05
+
+    # -- scaling sweep: {20, 64, 128} devices x engine x slot layout -------
+    n_mesh = len(jax.devices())
+    sweep = []
+    for n_dev, n_gw, n_ch in SCALE_SWEEP:
+        rounds = (5 if n_dev <= 20 else 4) if fast else 10
+        for engine, tiers in SCALE_ENGINES:
+            rec = _scale_run(n_dev, n_gw, n_ch, engine, tiers, rounds)
+            sweep.append(rec)
+            emit(f"fl_scale_{n_dev}dev_{engine}_t{tiers}_round_ms",
+                 rec["round_ms"],
+                 f"pad_ratio={rec['pad_ratio']:.2f};"
+                 f"compile_s={rec['compile_round_s']:.1f};"
+                 f"mesh={n_mesh}")
+        flat = next(r for r in sweep if r["devices"] == n_dev
+                    and r["engine"] == "cohort" and r["tiers"] == 1)
+        tier = next(r for r in sweep if r["devices"] == n_dev
+                    and r["engine"] == "cohort" and r["tiers"] == 4)
+        saved = 1.0 - tier["padded_samples"] / flat["padded_samples"]
+        print(f"  {n_dev:3d} devices: tiered slots drop padded samples "
+              f"{flat['padded_samples']:.0f} -> {tier['padded_samples']:.0f} "
+              f"(-{saved:.0%}); pad ratio {flat['pad_ratio']:.2f} -> "
+              f"{tier['pad_ratio']:.2f}")
+        assert tier["padded_samples"] <= flat["padded_samples"], \
+            "tiered layout must not pad more than the single-width contract"
+
     save_json("fl_round_bench", {
         "rounds": ROUNDS, "devices": DEVICES,
         "cohort_stats_s": co_stats_s, "cohort_run_s": co_run_s,
         "sequential_stats_s": seq_stats_s, "sequential_run_s": seq_run_s,
         "speedup": speedup, "run_speedup": run_speedup,
         "stats_speedup": stats_speedup, "cohort_compiles": traces,
+        "cohort_mesh_devices": n_mesh,
+        "scale_sweep": sweep,
     })
 
 

@@ -1,11 +1,29 @@
-from repro.fl.data import (CohortBatch, FLDataset, make_fl_dataset,
-                           sample_batch, sample_cohort_batch)
+"""Two-tier split federated learning: data pipeline, engines, simulation.
+
+Public surface (see ``README.md`` in this directory and
+``docs/architecture.md`` for the design):
+
+* :class:`Scenario` / :class:`Simulation` — the composable simulation API
+  (``repro.fl.sim``).
+* Engines — ``CohortEngine`` (one fused XLA program per round),
+  ``ShardedCohortEngine`` (the same round ``shard_map``-ed over a
+  ``"cohort"`` device mesh), ``SequentialEngine`` (seed per-device loop).
+* Packing contract — ``sample_cohort_batch`` + ``CohortLayout`` /
+  ``TieredCohortBatch`` (tiered slot widths) in ``repro.fl.data``.
+* ``FLTrainer`` / ``FLConfig`` — deprecated shim over ``Simulation``.
+"""
+from repro.fl.data import (CohortBatch, CohortLayout, FLDataset,
+                           TieredCohortBatch, make_fl_dataset, sample_batch,
+                           sample_cohort_batch)
 from repro.fl.sim import (ENGINES, CohortEngine, Engine, FLResult,
                           RoundRecord, Scenario, SequentialEngine, Simulation,
                           make_engine, register_engine)
+from repro.fl.shard import ShardedCohortEngine
 from repro.fl.trainer import FLConfig, FLTrainer
 
-__all__ = ["CohortBatch", "FLDataset", "make_fl_dataset", "sample_batch",
-           "sample_cohort_batch", "FLConfig", "FLResult", "FLTrainer",
-           "Scenario", "Simulation", "RoundRecord", "Engine", "CohortEngine",
-           "SequentialEngine", "ENGINES", "make_engine", "register_engine"]
+__all__ = ["CohortBatch", "CohortLayout", "TieredCohortBatch", "FLDataset",
+           "make_fl_dataset", "sample_batch", "sample_cohort_batch",
+           "FLConfig", "FLResult", "FLTrainer", "Scenario", "Simulation",
+           "RoundRecord", "Engine", "CohortEngine", "SequentialEngine",
+           "ShardedCohortEngine", "ENGINES", "make_engine",
+           "register_engine"]

@@ -30,9 +30,16 @@ tier *accounting* (delay/energy) lives in ``repro.core.costmodel``, which is
 where the paper keeps it too.
 
 Fixed-shape batching contract: inputs come from
-``repro.fl.data.sample_cohort_batch`` — always ``(N, B_pad, ...)`` with a
-row-validity mask, all devices present, non-participants zero-masked and
-zero-weighted — so varying device subsets never retrace.
+``repro.fl.data.sample_cohort_batch`` — padded slots with a row-validity
+mask, all slots present every round, non-participants zero-masked and
+zero-weighted — so varying device subsets never retrace. Slots may use
+**tiered widths** (``repro.fl.data.CohortLayout``): slot *i* is padded to
+roughly the i-th largest global ``d_tilde`` instead of the global maximum,
+and the fused program runs one ``vmap`` segment per tier — same single
+compile, a fraction of the padded samples. The per-slot helpers here
+(`_local_train`, `_boundary_rms`, `_grads_sigma_lips`) are shared with the
+`jax.shard_map`-sharded engine in ``repro.fl.shard``, which wraps them in a
+mapped body and turns the FedAvg reductions into masked ``psum`` s.
 """
 from __future__ import annotations
 
@@ -42,6 +49,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.fl.data import TieredCohortBatch
 from repro.fl.split import flat_params as _flat
 from repro.models import vgg
 from repro.models.vgg import Params, Plan
@@ -84,23 +92,31 @@ def _boundary_rms(plan: Plan, params: Params, x, mask, l) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# one FL round: (devices x K local epochs + FedAvg) fused
+# shared per-slot building blocks (single-host cohort AND sharded engine)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("plan", "k_iters", "with_boundary",
-                                    "with_gateway_models"))
-def _cohort_round(plan: Plan, params: Params, x, y, mask, l_n, weights,
-                  gw_onehot, lr, *, k_iters: int, with_boundary: bool,
-                  with_gateway_models: bool = False):
-    TRACE_COUNTS["round"] += 1
-    n_dev = x.shape[0]
+def _maybe_flatten(plan: Plan, xs: Tuple[jax.Array, ...]):
+    """Flatten images once per round (not inside every scanned epoch) when
+    the plan is all-fc — conv plans keep their NHWC layout."""
     if all(k in ("fc", "fc_last") for k in plan):
-        # flatten images once per round, not inside every scanned epoch
-        x = x.reshape(x.shape[0], x.shape[1], -1)
-    stacked = jax.tree.map(
-        lambda p: jnp.broadcast_to(p, (n_dev,) + p.shape), params)
+        return tuple(x.reshape(x.shape[0], x.shape[1], -1) for x in xs)
+    return xs
+
+
+def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr):
+    """K local SGD epochs for every slot: one ``vmap`` segment per tier
+    inside one ``lax.scan`` over the epochs.
+
+    ``xs/ys/masks`` are per-tier tuples (tier k: ``(S_k, W_k, ...)``).
+    Returns (per-tier stacked final params, per-tier last-epoch losses) in
+    the same tuple-of-tiers form, so callers control whether slots are
+    concatenated locally (single host) or reduced via ``psum`` (sharded).
+    """
+    stacked = tuple(
+        jax.tree.map(lambda p: jnp.broadcast_to(p, (x.shape[0],) + p.shape),
+                     params)
+        for x in xs)
 
     def dev_step(p, xb, yb, mb):
         def loss_of(pp):
@@ -109,12 +125,67 @@ def _cohort_round(plan: Plan, params: Params, x, y, mask, l_n, weights,
         new_p = jax.tree.map(lambda w_, g_: w_ - lr * g_, p, g)
         return new_p, loss
 
-    def one_epoch(p_stack, _):
-        return jax.vmap(dev_step)(p_stack, x, y, mask)
+    def one_epoch(p_stacks, _):
+        outs = [jax.vmap(dev_step)(p, x, y, m)
+                for p, x, y, m in zip(p_stacks, xs, ys, masks)]
+        return tuple(o[0] for o in outs), tuple(o[1] for o in outs)
 
     final, loss_hist = jax.lax.scan(one_epoch, stacked, None, length=k_iters)
-    dev_losses = loss_hist[-1]                     # loss at start of epoch K,
-    # matching the sequential path's "last split_sgd_step" loss semantics.
+    # last-epoch losses: matching the sequential path's "last
+    # split_sgd_step" loss semantics.
+    return final, tuple(lh[-1] for lh in loss_hist)
+
+
+def _boundary_tiers(plan: Plan, finals, xs, masks, ls):
+    """Per-slot boundary-activation RMS, one vmap segment per tier."""
+    return tuple(
+        jax.vmap(lambda p, xb, mb, l: _boundary_rms(plan, p, xb, mb, l))(
+            f, x, m, l)
+        for f, x, m, l in zip(finals, xs, masks, ls))
+
+
+def _split_tiers(v, sizes: Tuple[int, ...]):
+    """Split a tier-major per-slot vector/matrix into per-tier pieces."""
+    out, off = [], 0
+    for s in sizes:
+        out.append(v[off:off + s])
+        off += s
+    return tuple(out)
+
+
+def _concat_tiers(tree_tuple):
+    """Concatenate a tuple of pytrees along the leading (slot) axis."""
+    if len(tree_tuple) == 1:
+        return tree_tuple[0]
+    return jax.tree.map(lambda *ls: jnp.concatenate(ls), *tree_tuple)
+
+
+def _batch_tiers(batch):
+    """(xs, ys, masks) per-tier tuples from a CohortBatch or
+    TieredCohortBatch — single-width batches become one-tier tuples."""
+    tiers = batch.tiers if isinstance(batch, TieredCohortBatch) else (batch,)
+    return (tuple(jnp.asarray(t.x) for t in tiers),
+            tuple(jnp.asarray(t.y) for t in tiers),
+            tuple(jnp.asarray(t.mask) for t in tiers))
+
+
+# ---------------------------------------------------------------------------
+# one FL round: (devices x K local epochs + FedAvg) fused
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "k_iters", "with_boundary",
+                                    "with_gateway_models"))
+def _cohort_round(plan: Plan, params: Params, xs, ys, masks, l_n, weights,
+                  gw_onehot, lr, *, k_iters: int, with_boundary: bool,
+                  with_gateway_models: bool = False):
+    TRACE_COUNTS["round"] += 1
+    xs = _maybe_flatten(plan, xs)
+    sizes = tuple(x.shape[0] for x in xs)
+    final_t, loss_t = _local_train(plan, params, xs, ys, masks, k_iters, lr)
+    final = _concat_tiers(final_t)
+    dev_losses = jnp.concatenate(loss_t)
 
     # fused two-tier FedAvg: gateway-level then BS-level weighted averaging
     # telescopes to one weighted average over participating devices.
@@ -126,9 +197,8 @@ def _cohort_round(plan: Plan, params: Params, x, y, mask, l_n, weights,
     gw_loss = (gw_onehot.T @ (dev_losses * active)) / jnp.maximum(gw_count, 1.0)
 
     if with_boundary:
-        boundary = jax.vmap(
-            lambda p, xb, mb, l: _boundary_rms(plan, p, xb, mb, l)
-        )(final, x, mask, l_n)
+        boundary = jnp.concatenate(_boundary_tiers(
+            plan, final_t, xs, masks, _split_tiers(l_n, sizes)))
     else:    # skip the extra forward pass; l_n stays unused data
         boundary = jnp.zeros_like(weights)
 
@@ -150,25 +220,27 @@ def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
                  with_gateway_models: bool = False) -> Tuple:
     """Run one fused FL round for the whole cohort.
 
-    batch: ``repro.fl.data.CohortBatch`` (fixed padded shapes). The leading
-    axis is either "all devices" or "packed slots" — the engine is agnostic;
-    l_n / weights / gw_onehot just have to use the same indexing.
-    l_n: (N,) int partition point per row — traced data, never static.
-    weights: (N,) FedAvg weights (d_tilde for participants, 0 otherwise).
-    gw_onehot: (N, M) row->gateway incidence.
-    with_boundary: also report each row's boundary-activation RMS at its
+    batch: ``repro.fl.data.CohortBatch`` (single padded width) or
+    ``TieredCohortBatch`` (tiered slot widths, one vmap segment per tier).
+    The slot axis is either "all devices", "packed slots" or "tier-major
+    tiered slots" — the engine is agnostic; l_n / weights / gw_onehot just
+    have to use the same indexing (``TieredCohortBatch.slot_of`` maps
+    devices to tier-major slots).
+    l_n: (S,) int partition point per slot — traced data, never static.
+    weights: (S,) FedAvg weights (d_tilde for participants, 0 otherwise).
+    gw_onehot: (S, M) slot->gateway incidence.
+    with_boundary: also report each slot's boundary-activation RMS at its
     cut l_n (one extra forward pass).
     with_gateway_models: additionally return the per-gateway shop-floor
     FedAvg models (leading gateway axis), before the global mix — the
     intermediate the Fig. 2 divergence experiment measures.
 
     Returns (new_global_params, per_gateway_loss (M,), per_gateway_count (M,),
-    per_row_loss (N,), boundary_rms (N,)), plus the gateway models as a sixth
-    element when ``with_gateway_models`` is set.
+    per_slot_loss (S,), boundary_rms (S,)), plus the gateway models as a
+    sixth element when ``with_gateway_models`` is set.
     """
-    out = _cohort_round(plan, params,
-                        jnp.asarray(batch.x), jnp.asarray(batch.y),
-                        jnp.asarray(batch.mask),
+    xs, ys, masks = _batch_tiers(batch)
+    out = _cohort_round(plan, params, xs, ys, masks,
                         jnp.asarray(l_n, jnp.int32),
                         jnp.asarray(weights, jnp.float32),
                         jnp.asarray(gw_onehot, jnp.float32),
@@ -183,12 +255,13 @@ def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "sigma_samples"))
-def _cohort_stats(plan: Plan, params: Params, x, y, mask, mix_weights, lr,
-                  *, sigma_samples: int):
-    TRACE_COUNTS["stats"] += 1
-    if all(k in ("fc", "fc_last") for k in plan):
-        x = x.reshape(x.shape[0], x.shape[1], -1)
+def _grads_sigma_lips(plan: Plan, params: Params, x, y, mask, lr,
+                      sigma_samples: int):
+    """Per-device flat batch gradients, sigma_n and L_n — everything in the
+    stats pass that needs **no** cross-device reduction, so the sharded
+    engine can run it on a local slot shard and only ``psum`` the global
+    gradient for delta_n. ``x`` must already be flattened for all-fc plans.
+    Returns (grads (N, P), sigma (N,), lips (N,))."""
 
     def batch_grad(p, xb, yb, mb):
         def loss_of(pp):
@@ -218,16 +291,29 @@ def _cohort_stats(plan: Plan, params: Params, x, y, mask, mix_weights, lr,
 
     sigma = jax.lax.map(dev_sigma, (x[:, :s], y[:, :s], mask[:, :s]))
 
-    # delta_n: divergence from the D_n-weighted global gradient.
-    global_g = jnp.tensordot(mix_weights, grads, axes=1)
-    delta = jnp.linalg.norm(grads - global_g[None], axis=1)
-
     # L_n: two-point secant along the SGD direction.
     flat_params = _flat(params)
     pert = _unflatten_stacked(flat_params[None] - lr * grads, params)
     grads2 = jax.vmap(batch_grad)(pert, x, y, mask)
     dw = jnp.linalg.norm(jax.vmap(_flat)(pert) - flat_params[None], axis=1)
     lips = jnp.linalg.norm(grads2 - grads, axis=1) / jnp.maximum(dw, 1e-9)
+
+    return grads, sigma, lips
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "sigma_samples"))
+def _cohort_stats(plan: Plan, params: Params, x, y, mask, mix_weights, lr,
+                  *, sigma_samples: int):
+    TRACE_COUNTS["stats"] += 1
+    if all(k in ("fc", "fc_last") for k in plan):
+        x = x.reshape(x.shape[0], x.shape[1], -1)
+
+    grads, sigma, lips = _grads_sigma_lips(plan, params, x, y, mask, lr,
+                                           sigma_samples)
+
+    # delta_n: divergence from the D_n-weighted global gradient.
+    global_g = jnp.tensordot(mix_weights, grads, axes=1)
+    delta = jnp.linalg.norm(grads - global_g[None], axis=1)
 
     return sigma, delta, lips
 

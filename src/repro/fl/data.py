@@ -17,6 +17,8 @@ import numpy as np
 
 @dataclasses.dataclass
 class FLDataset:
+    """Synthetic non-IID FL dataset: one private shard per device plus a
+    shared IID test set (see the module docstring for how it is generated)."""
     x_dev: List[np.ndarray]     # per-device images (D_n, 32, 32, 3)
     y_dev: List[np.ndarray]
     x_test: np.ndarray
@@ -73,6 +75,8 @@ def make_fl_dataset(n_devices: int, sizes: np.ndarray, q_classes: np.ndarray,
 
 def sample_batch(rng: np.random.Generator, ds: FLDataset, n: int,
                  batch: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Draw one training batch (without replacement) from device ``n``'s
+    private shard; the batch shrinks to the shard size when it is smaller."""
     idx = rng.choice(len(ds.y_dev[n]), size=min(batch, len(ds.y_dev[n])),
                      replace=False)
     return ds.x_dev[n][idx], ds.y_dev[n][idx]
@@ -92,23 +96,151 @@ class CohortBatch:
     mask: np.ndarray     # (N, B_pad) float32, 1.0 on valid rows
 
 
+@dataclasses.dataclass(frozen=True)
+class CohortLayout:
+    """Tiered slot layout for the cohort engines (fixed across all rounds).
+
+    The single-width contract pads every slot to the *global* maximum
+    training batch ``max(d_tilde)``, wasting up to ~2x the samples actually
+    trained on. A tiered layout instead pads slot *i* to (roughly) the i-th
+    largest global ``d_tilde``: the slots are split into ``len(tier_widths)``
+    contiguous tiers, every slot in tier *k* is ``tier_widths[k]`` samples
+    wide, and the fused round runs one ``vmap`` segment per tier inside the
+    same jitted program. Widths are derived from the global (all-device)
+    ``d_tilde`` vector, so the layout — and therefore every array shape —
+    never changes across rounds, device subsets or partition decisions.
+
+    **Fit guarantee.** Widths descend tier over tier and devices are packed
+    into slots in decreasing batch-size order, so the k-th largest
+    participating batch always lands in a slot at least as wide as the k-th
+    largest global ``d_tilde`` — every participant fits, for every subset of
+    at most ``capacity`` devices.
+
+    ``shard_count`` rounds each tier's slot count up to a multiple of the
+    cohort-mesh size so `jax.shard_map` can split every tier evenly across
+    mesh devices; the extra slots stay permanently empty (zero mask/weight).
+    """
+    tier_widths: Tuple[int, ...]    # padded batch width per tier (descending)
+    tier_slots: Tuple[int, ...]     # number of slots per tier
+
+    @classmethod
+    def build(cls, d_tilde: np.ndarray, capacity: Optional[int] = None,
+              tiers: int = 1, shard_count: int = 1) -> "CohortLayout":
+        """Derive a layout from the global per-device batch sizes.
+
+        ``capacity``: number of (pre-padding) slots — the most devices a
+        round can schedule (defaults to all devices). ``tiers``: how many
+        distinct widths to use (1 reproduces the single-width contract).
+        ``shard_count``: round every tier's slot count up to this multiple.
+        """
+        widths = np.sort(np.asarray(d_tilde, dtype=int))[::-1]
+        capacity = len(widths) if capacity is None else int(capacity)
+        assert 1 <= capacity <= len(widths), (capacity, len(widths))
+        tiers = max(1, min(int(tiers), capacity))
+        groups = np.array_split(np.arange(capacity), tiers)
+        tier_widths, tier_slots = [], []
+        for g in groups:
+            tier_widths.append(int(widths[g[0]]))     # widest in the group
+            n_slots = -(-len(g) // shard_count) * shard_count
+            tier_slots.append(int(n_slots))
+        return cls(tuple(tier_widths), tuple(tier_slots))
+
+    @property
+    def n_slots(self) -> int:
+        """Total slot count (after any shard_count rounding)."""
+        return sum(self.tier_slots)
+
+    @property
+    def slot_widths(self) -> np.ndarray:
+        """(n_slots,) padded width of every slot, in tier-major order."""
+        return np.repeat(self.tier_widths, self.tier_slots)
+
+    @property
+    def padded_samples(self) -> int:
+        """Samples the fused round computes on per epoch (the whole padded
+        slot area — empty and partially-filled slots included)."""
+        return int(np.dot(self.tier_widths, self.tier_slots))
+
+    def locate(self, slot: int) -> Tuple[int, int]:
+        """Map a tier-major global slot index to its (tier, row) pair."""
+        for k, s in enumerate(self.tier_slots):
+            if slot < s:
+                return k, slot
+            slot -= s
+        raise IndexError(slot)
+
+
+@dataclasses.dataclass
+class TieredCohortBatch:
+    """Per-tier padded batches + the device->slot assignment of one round.
+
+    ``tiers[k]`` holds tier *k*'s arrays with shape
+    ``(layout.tier_slots[k], layout.tier_widths[k], ...)``; ``slot_of[i]``
+    is the tier-major global slot that ``device_ids[i]``'s samples landed
+    in. Per-slot engine outputs (losses, boundary RMS) use the same
+    tier-major indexing, so ``out[slot_of]`` scatters them back to devices.
+    """
+    tiers: Tuple[CohortBatch, ...]
+    slot_of: np.ndarray              # (len(device_ids),) int
+    layout: CohortLayout
+
+
 def sample_cohort_batch(rng: np.random.Generator, ds: FLDataset,
                         device_ids, batch_sizes: np.ndarray,
-                        pad_to: int, capacity: Optional[int] = None,
-                        ) -> CohortBatch:
+                        pad_to: Optional[int] = None,
+                        capacity: Optional[int] = None,
+                        layout: Optional[CohortLayout] = None,
+                        ):
     """Sample one padded batch per device in ``device_ids``.
 
-    Draws from ``rng`` in the order given by ``device_ids`` with exactly the
-    same calls as the sequential ``sample_batch`` loop, so a cohort round and
-    the seed per-device loop see identical data for identical rng states.
+    This function owns the cohort packing contract. Draws always come from
+    ``rng`` in the order given by ``device_ids`` with exactly the same calls
+    as the sequential ``sample_batch`` loop, so every engine (sequential,
+    cohort, sharded) sees identical data for identical rng states.
 
-    Without ``capacity`` the leading axis indexes *all* devices (row n =
-    device n). With ``capacity`` the participating devices are packed into
-    ``capacity`` slots in ``device_ids`` order — the scheduler can select at
-    most (channels x shop-floor size) devices per round, so a fixed slot
-    count keeps shapes static while skipping compute for absent devices.
+    Three layouts, one sampling order:
+
+    * default — the leading axis indexes *all* devices (row n = device n),
+      every row padded to ``pad_to``; returns a :class:`CohortBatch`.
+    * ``capacity`` — participants are packed into ``capacity``
+      ``pad_to``-wide slots in ``device_ids`` order — the scheduler can
+      select at most (channels x shop-floor size) devices per round, so a
+      fixed slot count keeps shapes static while skipping compute for
+      absent devices; returns a :class:`CohortBatch`.
+    * ``layout`` — tiered slot widths (:class:`CohortLayout`): after
+      sampling, devices are assigned to slots in decreasing batch-size
+      order (tier-major), which the layout's fit guarantee makes always
+      succeed; returns a :class:`TieredCohortBatch` carrying the
+      device->slot assignment.
     """
     device_ids = [int(n) for n in device_ids]
+    if layout is not None:
+        assert len(device_ids) <= layout.n_slots, \
+            "more participants than cohort slots"
+        draws = [sample_batch(rng, ds, n, int(batch_sizes[n]))
+                 for n in device_ids]                  # rng order preserved
+        lens = np.array([len(yb) for _, yb in draws], dtype=int)
+        sample_shape = ds.x_dev[0].shape[1:]
+        tiers = [CohortBatch(
+            np.zeros((s, w) + sample_shape, np.float32),
+            np.zeros((s, w), np.int32),
+            np.zeros((s, w), np.float32))
+            for s, w in zip(layout.tier_slots, layout.tier_widths)]
+        slot_of = np.empty(len(device_ids), dtype=int)
+        # largest batches first: rank r goes to global slot r, whose width
+        # is >= the r-th largest global d_tilde >= this batch (fit guarantee)
+        for rank, di in enumerate(np.argsort(-lens, kind="stable")):
+            k, row = layout.locate(rank)
+            xb, yb = draws[di]
+            b = len(yb)
+            assert b <= layout.tier_widths[k], (b, layout.tier_widths[k])
+            tiers[k].x[row, :b] = xb
+            tiers[k].y[row, :b] = yb
+            tiers[k].mask[row, :b] = 1.0
+            slot_of[di] = rank
+        return TieredCohortBatch(tuple(tiers), slot_of, layout)
+
+    assert pad_to is not None, "pad_to is required without a layout"
     packed = capacity is not None
     rows = capacity if packed else len(ds.y_dev)
     assert len(device_ids) <= rows, "more participants than cohort slots"

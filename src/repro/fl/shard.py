@@ -1,0 +1,254 @@
+"""Sharded 100+-device cohort engine: ``jax.shard_map`` over the slot axis.
+
+The fused cohort engine (``repro.fl.cohort``) compiles one XLA program per
+FL round, but executes the whole packed slot axis on a single accelerator —
+fine for the paper's 12-device topology, a ceiling for the 100+-device
+cohorts resource-constrained FL deployments target. This module removes
+that ceiling by mapping the *same* fused round body over a 1-D ``"cohort"``
+device mesh (``repro.sharding.cohort_mesh``):
+
+* **device slots are sharded** — every tier's ``(S_k, W_k, ...)`` batch
+  arrays split their slot axis evenly across mesh devices (the
+  ``CohortLayout`` rounds each tier's slot count up to a mesh multiple);
+* **model parameters are replicated** — each mesh device broadcasts the
+  global model to its local slots and trains them exactly as the
+  single-host engine would (same ``_local_train`` code);
+* **two-tier FedAvg = masked ``psum`` s inside the mapped body** — each
+  device reduces its local slots to weighted partial sums, one
+  ``psum`` over the ``"cohort"`` axis completes the gateway-level and
+  BS-level averages, so the per-gateway shop-floor models *and* the global
+  model come out of the same program with no host round-trip.
+
+The stats pass (``repro.fl.cohort.cohort_stats``) shards the same way: only
+the global mixed gradient (for delta_n) needs a ``psum``; sigma_n and L_n
+are per-device and run on the local shard.
+
+Numerically the sharded round equals the single-host cohort round up to
+reduction order (parity pinned at atol 1e-5 in ``tests/test_shard.py``,
+including on a forced 8-device CPU mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``). On a 1-device
+mesh — the CPU dev box default — it degrades gracefully to a plain fused
+program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+
+from repro.fl import cohort as cohort_lib
+from repro.fl import sim as sim_lib
+from repro.models.vgg import Params, Plan
+from repro.sharding import COHORT_AXIS, REPLICATED, SLOT_SPEC, cohort_mesh
+
+# Trace-time counters (Python side effects run only while tracing), so tests
+# and benchmarks can assert "exactly one compile across rounds".
+TRACE_COUNTS = {"round": 0, "stats": 0}
+
+
+def _psum(v):
+    return jax.lax.psum(v, COHORT_AXIS)
+
+
+@functools.lru_cache(maxsize=None)
+def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
+                   with_boundary: bool, with_gateway_models: bool):
+    """Compile-once sharded round: slots tiled over the mesh, params
+    replicated, FedAvg as masked psums inside the mapped body."""
+
+    def body(params, xs, ys, masks, ls, ws, gws, lr):
+        TRACE_COUNTS["round"] += 1
+        xs = cohort_lib._maybe_flatten(plan, xs)
+        final_t, loss_t = cohort_lib._local_train(
+            plan, params, xs, ys, masks, k_iters, lr)
+        final = cohort_lib._concat_tiers(final_t)       # local slots only
+        w = jnp.concatenate(ws)
+        losses = jnp.concatenate(loss_t)
+        gw = jnp.concatenate(gws)
+
+        # BS-level FedAvg: local weighted partial sums -> one psum. The
+        # gateway-level + BS-level averaging telescopes to a single weighted
+        # average over participating slots, as in the single-host engine.
+        w_sum = _psum(jnp.sum(w))
+        new_global = jax.tree.map(
+            lambda s: _psum(jnp.tensordot(w, s, axes=1))
+            / jnp.maximum(w_sum, 1e-12), final)
+
+        # per-gateway losses: masked psums over the slot->gateway incidence
+        active = (w > 0).astype(jnp.float32)
+        gw_count = _psum(gw.T @ active)                             # (M,)
+        gw_loss = _psum(gw.T @ (losses * active)) \
+            / jnp.maximum(gw_count, 1.0)
+
+        if with_boundary:
+            boundary = cohort_lib._boundary_tiers(plan, final_t, xs, masks, ls)
+        else:
+            boundary = tuple(jnp.zeros_like(wt) for wt in ws)
+
+        if with_gateway_models:
+            # gateway-level (shop-floor) FedAvg before the global mix, also
+            # as masked psums: numerator and denominator per gateway column.
+            gw_w = gw * w[:, None]                                  # (s, M)
+            den = _psum(jnp.sum(gw_w, axis=0))                      # (M,)
+
+            def col_avg(s):
+                num = _psum(jnp.tensordot(gw_w.T, s, axes=1))       # (M, ...)
+                return num / jnp.maximum(den, 1e-12).reshape(
+                    (-1,) + (1,) * (num.ndim - 1))
+
+            gw_models = jax.tree.map(col_avg, final)
+        else:
+            gw_models = None
+
+        return new_global, gw_loss, gw_count, loss_t, boundary, gw_models
+
+    tile, rep = SLOT_SPEC, REPLICATED
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(rep, tile, tile, tile, tile, tile, tile, rep),
+                   out_specs=(rep, rep, rep, tile, tile, rep),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _stats_program(mesh, plan: Plan, sigma_samples: int):
+    """Compile-once sharded stats pass: device rows tiled over the mesh;
+    only the globally-mixed gradient (for delta_n) crosses shards."""
+
+    def body(params, x, y, mask, mix_w, lr):
+        TRACE_COUNTS["stats"] += 1
+        if all(k in ("fc", "fc_last") for k in plan):
+            x = x.reshape(x.shape[0], x.shape[1], -1)
+        grads, sigma, lips = cohort_lib._grads_sigma_lips(
+            plan, params, x, y, mask, lr, sigma_samples)
+        global_g = _psum(jnp.tensordot(mix_w, grads, axes=1))
+        delta = jnp.linalg.norm(grads - global_g[None], axis=1)
+        return sigma, delta, lips
+
+    tile, rep = SLOT_SPEC, REPLICATED
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(rep, tile, tile, tile, tile, rep),
+                   out_specs=(tile, tile, tile),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:
+    """Zero-pad the leading axis of ``a`` up to ``rows``."""
+    if a.shape[0] == rows:
+        return a
+    pad = np.zeros((rows - a.shape[0],) + a.shape[1:], a.dtype)
+    return np.concatenate([a, pad])
+
+
+def sharded_cohort_round(mesh, plan: Plan, params: Params, batch, l_slot,
+                         w_slot, gw_onehot, k_iters: int, lr,
+                         with_boundary: bool = True,
+                         with_gateway_models: bool = False) -> Tuple:
+    """Run one fused FL round sharded over ``mesh``'s ``"cohort"`` axis.
+
+    Same contract and return convention as
+    ``repro.fl.cohort.cohort_round`` (5-tuple, or 6-tuple with the gateway
+    models when ``with_gateway_models`` is set); ``batch`` may be a
+    ``CohortBatch`` or a ``TieredCohortBatch``. Tiers whose slot count does
+    not divide the mesh size are transparently zero-padded (empty slots are
+    masked out of every reduction) and the per-slot outputs are trimmed
+    back, so all-device layouts work unchanged on any mesh.
+    """
+    n_mesh = mesh.shape[COHORT_AXIS]
+    xs, ys, masks = cohort_lib._batch_tiers(batch)
+    sizes = tuple(x.shape[0] for x in xs)
+    padded = tuple(-(-s // n_mesh) * n_mesh for s in sizes)
+
+    l_t = cohort_lib._split_tiers(np.asarray(l_slot), sizes)
+    w_t = cohort_lib._split_tiers(np.asarray(w_slot), sizes)
+    gw_t = cohort_lib._split_tiers(np.asarray(gw_onehot), sizes)
+
+    def pad_all(arrs, dtype=None):
+        return tuple(jnp.asarray(_pad_rows(np.asarray(a, dtype), p))
+                     for a, p in zip(arrs, padded))
+
+    xs = pad_all(xs)
+    ys = pad_all(ys, np.int32)
+    masks = pad_all(masks, np.float32)
+    l_t = pad_all(l_t, np.int32)
+    w_t = pad_all(w_t, np.float32)
+    gw_t = pad_all(gw_t, np.float32)
+
+    fn = _round_program(mesh, plan, k_iters, len(sizes),
+                        with_boundary, with_gateway_models)
+    new_global, gw_loss, gw_count, loss_t, boundary_t, gw_models = fn(
+        params, xs, ys, masks, l_t, w_t, gw_t, jnp.float32(lr))
+
+    # trim the per-tier padding back off the per-slot outputs
+    dev_losses = jnp.concatenate([v[:s] for v, s in zip(loss_t, sizes)])
+    boundary = jnp.concatenate([v[:s] for v, s in zip(boundary_t, sizes)])
+    out = (new_global, gw_loss, gw_count, dev_losses, boundary)
+    return (*out, gw_models) if with_gateway_models else out
+
+
+def sharded_cohort_stats(mesh, plan: Plan, params: Params, batch,
+                         mix_weights, lr, sigma_samples: int):
+    """sigma/delta/Lipschitz for every device, sharded over ``mesh``.
+
+    Mirrors ``repro.fl.cohort.cohort_stats``: ``batch`` uses the
+    all-devices layout (row n = device n); rows are zero-padded to a mesh
+    multiple and the padding is trimmed from the outputs.
+    """
+    n_mesh = mesh.shape[COHORT_AXIS]
+    n_dev = batch.x.shape[0]
+    rows = -(-n_dev // n_mesh) * n_mesh
+    fn = _stats_program(mesh, plan, sigma_samples)
+    sigma, delta, lips = fn(
+        params,
+        jnp.asarray(_pad_rows(np.asarray(batch.x, np.float32), rows)),
+        jnp.asarray(_pad_rows(np.asarray(batch.y, np.int32), rows)),
+        jnp.asarray(_pad_rows(np.asarray(batch.mask, np.float32), rows)),
+        jnp.asarray(_pad_rows(np.asarray(mix_weights, np.float32), rows)),
+        jnp.float32(lr))
+    return sigma[:n_dev], delta[:n_dev], lips[:n_dev]
+
+
+@sim_lib.register_engine("sharded")
+class ShardedCohortEngine(sim_lib.CohortEngine):
+    """Cohort engine sharded over a 1-D ``"cohort"`` device mesh.
+
+    Drop-in replacement for :class:`repro.fl.sim.CohortEngine` for
+    100+-device cohorts: identical packing/telemetry logic, but the fused
+    round and stats programs run under ``jax.shard_map`` with device slots
+    sharded, parameters replicated, and the two-tier FedAvg reduced via
+    masked psums (see the module docstring). ``Scenario.mesh_shape`` picks
+    the mesh size (``None`` = every addressable device); on a single-device
+    host it falls back to a 1-device mesh with identical numerics.
+    """
+
+    def _mesh(self, sim: "sim_lib.Simulation"):
+        """The (cached) cohort mesh this simulation's scenario asked for."""
+        return cohort_mesh(sim.scenario.mesh_shape)
+
+    def _shard_count(self, sim: "sim_lib.Simulation") -> int:
+        """Tier slot counts must divide the cohort mesh size."""
+        return int(self._mesh(sim).shape[COHORT_AXIS])
+
+    def _fused_round(self, sim: "sim_lib.Simulation", params, batch, l_slot,
+                     w_slot, gw_slot, *, with_boundary: bool,
+                     with_gateway_models: bool):
+        """Run the round under shard_map instead of on a single device."""
+        sc = sim.scenario
+        out = sharded_cohort_round(
+            self._mesh(sim), sim.plan, params, batch, l_slot, w_slot,
+            gw_slot, sc.k_iters, sc.lr, with_boundary=with_boundary,
+            with_gateway_models=with_gateway_models)
+        return out if with_gateway_models else (*out, None)
+
+    def _fused_stats(self, sim: "sim_lib.Simulation", params, batch, mix):
+        """Run the sigma/delta/L_n program under shard_map (same rng draws
+        and DataStats post-processing as the single-host cohort engine, so
+        engines stay swappable)."""
+        sc = sim.scenario
+        return sharded_cohort_stats(self._mesh(sim), sim.plan, params,
+                                    batch, mix, sc.lr, sc.sigma_samples)

@@ -11,9 +11,11 @@ protocols:
   policies come from the decorator registry in ``repro.core.schedulers``
   (``make_policy`` threads registry-declared kwargs such as ``seed``).
 * **Engine** — how a scheduled round is physically executed:
-  ``CohortEngine`` (one fused XLA program per round, ``repro.fl.cohort``)
-  or ``SequentialEngine`` (the seed per-device loop, kept as the parity
-  reference). Both implement ``estimate_stats`` + ``train_round``.
+  ``CohortEngine`` (one fused XLA program per round, ``repro.fl.cohort``),
+  ``ShardedCohortEngine`` (the same fused round mapped over a 1-D
+  ``"cohort"`` device mesh via ``jax.shard_map``, ``repro.fl.shard``) or
+  ``SequentialEngine`` (the seed per-device loop, kept as the parity
+  reference). All implement ``estimate_stats`` + ``train_round``.
 
 On top sits :class:`Simulation`: a streaming ``rounds()`` generator yielding
 one :class:`RoundRecord` per round (decision, delay, gateway losses, queue
@@ -44,7 +46,8 @@ from repro.core.schedulers import (POLICIES, RoundContext, make_policy,
                                    policy_state, set_policy_state)
 from repro.fl import cohort as cohort_lib
 from repro.fl import split as split_lib
-from repro.fl.data import make_fl_dataset, sample_batch, sample_cohort_batch
+from repro.fl.data import (CohortLayout, make_fl_dataset, sample_batch,
+                           sample_cohort_batch)
 from repro.fl.roles import BaseStation, Device, Gateway
 from repro.models import registry as model_registry
 from repro.models import vgg
@@ -57,7 +60,17 @@ from repro.models import vgg
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """Frozen, serializable spec of one FL experiment."""
+    """Frozen, JSON-serializable spec of one FL experiment.
+
+    Everything that defines a run lives here: the network/topology config
+    (``net``), the data distribution (``alpha``/``chi``/``max_dataset``),
+    the model (a ``repro.models.registry`` name), local-training
+    hyperparameters, the default policy/engine names, and the execution
+    layout for the cohort engines (``tiers`` tiered slot widths;
+    ``mesh_shape`` for the sharded engine's cohort mesh).
+    ``to_json``/``from_json`` round-trip exactly, and checkpoints written
+    before a field existed load with its default.
+    """
     model: str = "vgg"                 # repro.models.registry.FL_MODELS key
     width_mult: float = 0.25
     classes: int = 10
@@ -74,13 +87,18 @@ class Scenario:
     chi: float = 1.0                   # non-IID degree
     sigma_samples: int = 8             # per-sample grads for sigma estimation
     engine: str = "cohort"             # ENGINES key
+    tiers: int = 1                     # tiered slot widths (1 = single width)
+    mesh_shape: Optional[Tuple[int, ...]] = None   # cohort mesh (None = all)
     net: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)
 
     def to_json(self) -> dict:
+        """Serialize to a plain-JSON dict (tuples become lists)."""
         return dataclasses.asdict(self)
 
     @classmethod
     def from_json(cls, d: dict) -> "Scenario":
+        """Rebuild from :meth:`to_json` output; missing fields (e.g. in
+        checkpoints from older versions) take their defaults."""
         d = dict(d)
         net = d.pop("net", {})
         if isinstance(net, dict):
@@ -90,6 +108,8 @@ class Scenario:
                     net[k] = tuple(net[k])
             net = NetworkConfig(**net)
         d["mlp_hidden"] = tuple(d.get("mlp_hidden", (128, 64)))
+        if d.get("mesh_shape") is not None:
+            d["mesh_shape"] = tuple(d["mesh_shape"])
         return cls(net=net, **d)
 
 
@@ -116,6 +136,7 @@ class RoundRecord:
 
 @dataclasses.dataclass
 class FLResult:
+    """Aggregate outcome of a full run (built by ``Simulation.result_of``)."""
     accuracy: List[float]
     acc_rounds: List[int]
     cum_delay: List[float]
@@ -134,6 +155,8 @@ ENGINES: Dict[str, Type["Engine"]] = {}
 
 
 def register_engine(name: str):
+    """Class decorator: register an :class:`Engine` under ``name`` (the
+    value a ``Scenario.engine`` field refers to). Duplicate names raise."""
     def deco(cls):
         if name in ENGINES:
             raise ValueError(f"engine {name!r} already registered")
@@ -144,6 +167,7 @@ def register_engine(name: str):
 
 
 def make_engine(name: str) -> "Engine":
+    """Instantiate a registered engine by name (see ``ENGINES``)."""
     if name not in ENGINES:
         raise ValueError(f"unknown engine {name!r}: "
                          f"expected one of {sorted(ENGINES)}")
@@ -155,6 +179,8 @@ class Engine:
     name: str
 
     def estimate_stats(self, sim: "Simulation", params) -> DataStats:
+        """Estimate the per-device sigma_n/delta_n/L_n statistics the
+        divergence bound (paper Sec. VII-A) needs."""
         raise NotImplementedError
 
     def train_round(self, sim: "Simulation", trained: List[int],
@@ -167,16 +193,58 @@ class Engine:
 
 @register_engine("cohort")
 class CohortEngine(Engine):
-    """One fused XLA program per round (see ``repro.fl.cohort``)."""
+    """One fused XLA program per round (see ``repro.fl.cohort``).
+
+    Participants are packed into a fixed tier-major slot layout
+    (``repro.fl.data.CohortLayout`` — ``Scenario.tiers`` controls how many
+    distinct slot widths are used; 1 reproduces the historical single-width
+    contract), so every round reuses one compiled executable regardless of
+    which devices the policy schedules.
+    """
+
+    def _shard_count(self, sim: "Simulation") -> int:
+        """Multiple each tier's slot count must divide into (the cohort
+        mesh size for the sharded subclass; 1 on a single host)."""
+        return 1
+
+    def _layout(self, sim: "Simulation", capacity: int) -> CohortLayout:
+        """The (cached) fixed slot layout for ``capacity``-slot rounds."""
+        key = (capacity, sim.scenario.tiers, self._shard_count(sim))
+        if key not in sim._layouts:
+            sim._layouts[key] = CohortLayout.build(
+                sim.d_tilde, capacity, sim.scenario.tiers,
+                self._shard_count(sim))
+        return sim._layouts[key]
+
+    def _fused_round(self, sim: "Simulation", params, batch, l_slot, w_slot,
+                     gw_slot, *, with_boundary: bool,
+                     with_gateway_models: bool):
+        """Execute one fused round; subclasses override this to change
+        *where* it runs (e.g. sharded over a mesh) without touching the
+        packing/telemetry logic above it. Always returns the 6-tuple
+        (new_global, gw_loss, gw_count, slot_losses, boundary, gw_models)
+        with ``gw_models=None`` when not requested."""
+        sc = sim.scenario
+        out = cohort_lib.cohort_round(
+            sim.plan, params, batch, l_slot, w_slot, gw_slot,
+            sc.k_iters, sc.lr, with_boundary=with_boundary,
+            with_gateway_models=with_gateway_models)
+        return out if with_gateway_models else (*out, None)
+
+    def _fused_stats(self, sim: "Simulation", params, batch, mix):
+        """Run the fused sigma/delta/L_n program; the sharded subclass
+        overrides this (only) to run it under shard_map."""
+        sc = sim.scenario
+        return cohort_lib.cohort_stats(sim.plan, params, batch, mix, sc.lr,
+                                       sc.sigma_samples)
 
     def estimate_stats(self, sim: "Simulation", params) -> DataStats:
-        sc = sim.scenario
+        """sigma/delta/Lipschitz for every device in one fused program."""
         n_dev = sim.net.cfg.n_devices
         batch = sample_cohort_batch(sim.rng, sim.ds, range(n_dev),
                                     sim.d_tilde, int(sim.d_tilde.max()))
         mix = sim.d_sizes / sim.d_sizes.sum()
-        sigma, delta, lips = cohort_lib.cohort_stats(
-            sim.plan, params, batch, mix, sc.lr, sc.sigma_samples)
+        sigma, delta, lips = self._fused_stats(sim, params, batch, mix)
         return DataStats(np.asarray(sigma), np.asarray(delta),
                          np.maximum(np.asarray(lips), 0.1),
                          sim.d_tilde.astype(float))
@@ -184,9 +252,10 @@ class CohortEngine(Engine):
     def train_round(self, sim: "Simulation", trained: List[int],
                     l_n: np.ndarray,
                     with_boundary: bool = False) -> Optional[np.ndarray]:
+        """Pack the scheduled devices into the fixed slot layout and run
+        the fused round in-place on ``sim``."""
         if not trained:
             return None
-        sc = sim.scenario
         device_ids: List[int] = []
         for m in trained:
             device_ids.extend(dev.idx for dev in sim.gateways[m].devices)
@@ -194,26 +263,32 @@ class CohortEngine(Engine):
         # devices layout (one extra compile, same numerics) if it ever won't
         cap = sim.cohort_capacity if len(device_ids) <= sim.cohort_capacity \
             else sim.net.cfg.n_devices
-        l_slot = np.zeros(cap, int)
-        w_slot = np.zeros(cap, np.float32)
-        slot_gw = np.zeros((cap, sim.net.cfg.n_gateways), np.float32)
-        for s, n in enumerate(device_ids):
+        layout = self._layout(sim, cap)
+        batch = sample_cohort_batch(sim.rng, sim.ds, device_ids,
+                                    sim.d_tilde, layout=layout)
+        n_slots = layout.n_slots
+        l_slot = np.zeros(n_slots, int)
+        w_slot = np.zeros(n_slots, np.float32)
+        slot_gw = np.zeros((n_slots, sim.net.cfg.n_gateways), np.float32)
+        for di, n in enumerate(device_ids):
+            s = int(batch.slot_of[di])
             l_slot[s] = l_n[n]
             w_slot[s] = sim.d_tilde[n]
             slot_gw[s, sim.net.assign[n]] = 1.0
-        batch = sample_cohort_batch(sim.rng, sim.ds, device_ids,
-                                    sim.d_tilde, int(sim.d_tilde.max()),
-                                    capacity=cap)
-        new_global, gw_loss, _, _, boundary = cohort_lib.cohort_round(
-            sim.plan, sim.params, batch, l_slot, w_slot, slot_gw,
-            sc.k_iters, sc.lr, with_boundary=with_boundary)
+        new_global, gw_loss, _, _, boundary, _ = self._fused_round(
+            sim, sim.params, batch, l_slot, w_slot, slot_gw,
+            with_boundary=with_boundary, with_gateway_models=False)
         sim.params = new_global
+        # padded-vs-real sample accounting (read by fl_round_bench)
+        sim.padding_stats["real_samples"] += float(
+            sum(t.mask.sum() for t in batch.tiers))
+        sim.padding_stats["padded_samples"] += float(layout.padded_samples)
         gw_loss = np.asarray(gw_loss)
         for m in trained:
             sim.losses[m] = float(gw_loss[m])
         if with_boundary:
             rms = np.zeros(sim.net.cfg.n_devices)
-            rms[device_ids] = np.asarray(boundary)[:len(device_ids)]
+            rms[device_ids] = np.asarray(boundary)[batch.slot_of]
             return rms
         return None
 
@@ -226,21 +301,22 @@ class CohortEngine(Engine):
 
         Batches are drawn from ``rng`` in ``device_ids`` order — exactly the
         draws the sequential per-device loop would make — and returned so the
-        caller can, e.g., pool them for a centralized-GD twin.
+        caller can, e.g., pool them for a centralized-GD twin. This path
+        keeps the all-devices layout (row n = device n) so ``l_n``/weights
+        index devices directly.
 
         Returns (new_global, gateway_models (leading M axis), gateway_losses,
         CohortBatch).
         """
-        sc = sim.scenario
         rng = sim.rng if rng is None else rng
         params = sim.params if params is None else params
         weights = np.zeros(sim.net.cfg.n_devices, np.float32)
         weights[list(device_ids)] = sim.d_tilde[list(device_ids)]
         batch = sample_cohort_batch(rng, sim.ds, device_ids, sim.d_tilde,
                                     int(sim.d_tilde.max()))
-        new_global, gw_loss, _, _, _, gw_models = cohort_lib.cohort_round(
-            sim.plan, params, batch, l_n, weights, sim.net.a,
-            sc.k_iters, sc.lr, with_boundary=False, with_gateway_models=True)
+        new_global, gw_loss, _, _, _, gw_models = self._fused_round(
+            sim, params, batch, l_n, weights, sim.net.a,
+            with_boundary=False, with_gateway_models=True)
         return new_global, gw_models, np.asarray(gw_loss), batch
 
 
@@ -249,6 +325,8 @@ class SequentialEngine(Engine):
     """Seed per-device Python loop (kept as the parity/bench reference)."""
 
     def estimate_stats(self, sim: "Simulation", params) -> DataStats:
+        """sigma/delta/Lipschitz estimated one device at a time (the seed
+        O(devices x samples) loop of jitted calls)."""
         sc = sim.scenario
         n_dev = sim.net.cfg.n_devices
         grads, sigmas, lips = [], [], []
@@ -284,6 +362,8 @@ class SequentialEngine(Engine):
     def train_round(self, sim: "Simulation", trained: List[int],
                     l_n: np.ndarray,
                     with_boundary: bool = False) -> Optional[np.ndarray]:
+        """One round as the seed ran it: a Python loop over gateways and
+        devices with per-device jitted split-SGD steps."""
         sc = sim.scenario
         models, weights = [], []
         for m in trained:
@@ -361,6 +441,7 @@ class Simulation:
         per_gw = int(np.bincount(self.net.assign,
                                  minlength=ncfg.n_gateways).max())
         self.cohort_capacity = min(ncfg.n_devices, ncfg.n_channels * per_gw)
+        self._layouts: Dict = {}      # (capacity, tiers, shards) -> layout
 
         # ``_stats`` (resume fast path) skips the estimation pass entirely —
         # callers providing it are responsible for also restoring the batch
@@ -400,6 +481,8 @@ class Simulation:
         self.queues = np.zeros(ncfg.n_gateways)
         self.losses = np.full(ncfg.n_gateways, np.log(self.scenario.classes))
         self.delay_sum = 0.0
+        # cumulative padded-vs-real sample counts (cohort engines fill this)
+        self.padding_stats = {"real_samples": 0.0, "padded_samples": 0.0}
         self._policy = None
         self._policy_unresumable = False
 
@@ -517,6 +600,7 @@ class Simulation:
         return self.result_of(records)
 
     def result_of(self, records: List[RoundRecord]) -> FLResult:
+        """Fold a list of streamed RoundRecords into an :class:`FLResult`."""
         acc = [r.accuracy for r in records if r.accuracy is not None]
         acc_rounds = [r.t + 1 for r in records if r.accuracy is not None]
         return FLResult(
@@ -628,3 +712,8 @@ def _unflatten_like(flat: np.ndarray, tree):
                    .astype(leaf.dtype))
         i += n
     return out
+
+
+# Registers ShardedCohortEngine under "sharded" in ENGINES. Must stay at the
+# bottom: repro.fl.shard subclasses CohortEngine from this module.
+import repro.fl.shard  # noqa: E402,F401

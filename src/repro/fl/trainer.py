@@ -43,6 +43,7 @@ class FLConfig:
     boundary_telemetry: bool = False  # per-device boundary-activation RMS
 
     def to_scenario(self, net_cfg: Optional[NetworkConfig] = None) -> Scenario:
+        """Translate this legacy config into the equivalent Scenario."""
         return Scenario(
             model=self.model, width_mult=self.width_mult,
             classes=self.classes, k_iters=self.k_iters, lr=self.lr,
@@ -80,10 +81,13 @@ class FLTrainer:
             object.__setattr__(self, name, value)
 
     def estimate_stats(self, params, engine: Optional[str] = None):
+        """Deprecated alias for ``Simulation.estimate_stats``."""
         return self.sim.estimate_stats(params, engine=engine)
 
     def run(self, scheduler_name: Optional[str] = None,
             engine: Optional[str] = None) -> FLResult:
+        """Deprecated alias for ``Simulation.run`` (plus the historical
+        ``boundary_telemetry`` / per-call ``engine`` override semantics)."""
         old_engine = self.sim.engine
         if engine is not None:
             self.sim.engine = make_engine(engine)

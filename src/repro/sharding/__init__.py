@@ -1,5 +1,56 @@
-"""Logical-axis sharding rules -> PartitionSpec (see repro.models.params)."""
+"""Sharding substrate for the repro system.
+
+Two families of helpers live here:
+
+* **Model-parallel parameter sharding** — logical-axis rules mapped to
+  ``jax.sharding.PartitionSpec`` trees (re-exported from
+  ``repro.models.params``): ``DEFAULT_RULES``, ``partition_specs``,
+  ``rules_for_mesh``.
+* **Cohort-axis data parallelism** — the 1-D ``"cohort"`` mesh the sharded
+  FL engine (``repro.fl.shard``) maps device *slots* over while replicating
+  model parameters: ``COHORT_AXIS``, ``cohort_mesh``, and the two
+  canonical specs ``SLOT_SPEC`` (leading slot axis sharded) /
+  ``REPLICATED``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
 from repro.models.params import (DEFAULT_RULES, partition_specs,
                                  rules_for_mesh)
 
-__all__ = ["DEFAULT_RULES", "partition_specs", "rules_for_mesh"]
+# The mesh axis the sharded cohort engine maps device slots over.
+COHORT_AXIS = "cohort"
+
+# Canonical specs for the cohort mesh: per-slot arrays shard their leading
+# axis; model parameters / global reductions are replicated.
+SLOT_SPEC = PartitionSpec(COHORT_AXIS)
+REPLICATED = PartitionSpec()
+
+
+@functools.lru_cache(maxsize=None)
+def cohort_mesh(mesh_shape: Optional[Tuple[int, ...]] = None) -> Mesh:
+    """Build the 1-D ``"cohort"`` mesh for the sharded FL engine.
+
+    ``mesh_shape`` is the (optionally multi-dim, flattened) device count to
+    request; ``None`` uses every addressable device. The mesh degrades
+    gracefully: asking for more devices than the process has (e.g. on a
+    single-CPU dev box) silently clamps to what is available, down to a
+    1-device mesh — the sharded engine then runs as a plain fused program
+    with mathematically identical results. Use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to exercise a
+    real multi-device CPU mesh in tests.
+    """
+    devices = jax.devices()
+    want = len(devices) if mesh_shape is None else int(np.prod(mesh_shape))
+    n = max(1, min(want, len(devices)))
+    return Mesh(np.asarray(devices[:n]), (COHORT_AXIS,))
+
+
+__all__ = ["DEFAULT_RULES", "partition_specs", "rules_for_mesh",
+           "COHORT_AXIS", "SLOT_SPEC", "REPLICATED", "cohort_mesh"]

@@ -81,11 +81,22 @@ def test_fl_model_registry_resolves_plan_and_costs():
 
 def test_scenario_json_roundtrip():
     sc = _scenario(model="vgg", width_mult=0.125, mlp_hidden=(32, 16),
+                   tiers=3, mesh_shape=(8,),
                    net=NetworkConfig(n_gateways=4, n_devices=8))
     rt = Scenario.from_json(json.loads(json.dumps(sc.to_json())))
     assert rt == sc
     assert isinstance(rt.net.dist_range, tuple)
+    assert isinstance(rt.mesh_shape, tuple)
     assert dataclasses.asdict(rt) == dataclasses.asdict(sc)
+
+
+def test_scenario_from_json_accepts_pre_mesh_checkpoints():
+    """Manifests written before mesh_shape/tiers existed load with the
+    defaults (checkpoint forward-compatibility)."""
+    d = _scenario().to_json()
+    del d["mesh_shape"], d["tiers"]
+    sc = Scenario.from_json(d)
+    assert sc.mesh_shape is None and sc.tiers == 1
 
 
 # ---------------------------------------------------------------------------
@@ -192,11 +203,13 @@ def _records_equal(a, b):
 
 
 @pytest.mark.parametrize("engine,policy", [("cohort", "random"),
-                                           ("sequential", "ddsra")])
+                                           ("sequential", "ddsra"),
+                                           ("sharded", "ddsra")])
 def test_checkpoint_resume_bit_identical(engine, policy, tmp_path):
     """A run checkpointed at round t and resumed matches an uninterrupted
     run record-for-record, including the final parameters."""
-    sc = _scenario(rounds=6, eval_every=3, engine=engine)
+    kw = {"tiers": 2} if engine == "sharded" else {}
+    sc = _scenario(rounds=6, eval_every=3, engine=engine, **kw)
     uninterrupted = Simulation(sc)
     full = list(uninterrupted.rounds(policy))
 
