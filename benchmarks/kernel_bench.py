@@ -1,16 +1,30 @@
 """Kernel micro-benchmarks: µs/call of the jnp reference paths on CPU (the
 Pallas kernels target TPU; interpret-mode timing is not meaningful), plus an
-analytic MXU-roofline estimate of the kernel's TPU-side time."""
+analytic MXU-roofline estimate of the kernel's TPU-side time.
+
+``--backward`` adds the fused_linear training-step contractions — the
+transposed-operand ``dx = dz @ wᵀ`` / ``(dw, db) = (xᵀ @ dz, Σ dz)`` refs
+and the end-to-end ``jax.grad`` of the custom-VJP ``linear`` op — i.e. the
+two-thirds of per-step FLOPs the backward subsystem moved onto kernels.
+
+Timings accumulate into ``artifacts/benchmarks/kernel_bench.json`` (the
+forward and backward sections merge, so either invocation order leaves
+both populated).
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import ARTIFACTS, emit, save_json
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.fused_linear.ref import fused_linear_ref
+from repro.kernels.fused_linear import ops as fused_ops
+from repro.kernels.fused_linear.ref import (fused_linear_bwd_dw_db_ref,
+                                            fused_linear_bwd_dx_ref,
+                                            fused_linear_ref)
 from repro.kernels.ssd_scan.ref import ssd_ref
 
 PEAK = 197e12
@@ -26,16 +40,21 @@ def _bench(fn, *args, iters: int = 5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(fast: bool = True):
+def _emit(record: dict, name: str, us: float, roofline_us: float) -> None:
+    emit(name, us, f"tpu_roofline_us={roofline_us:.1f}")
+    record[name] = {"us_per_call": us, "tpu_roofline_us": roofline_us}
+
+
+def _forward(record: dict) -> None:
     k = jax.random.PRNGKey(0)
     # flash attention: B=2 H=8 S=1024 D=128
     b, h, s, d = 2, 8, 1024, 128
     q, kk, v = (jax.random.normal(jax.random.fold_in(k, i), (b, h, s, d),
                                   jnp.float32) for i in range(3))
     f = jax.jit(lambda a, b_, c: attention_ref(a, b_, c, causal=True))
-    us = _bench(f, q, kk, v)
     flops = 4 * b * h * s * s * d / 2
-    emit("kernel_flash_attention_ref", us, f"tpu_roofline_us={flops/PEAK*1e6:.1f}")
+    _emit(record, "kernel_flash_attention_ref", _bench(f, q, kk, v),
+          flops / PEAK * 1e6)
 
     # ssd scan: B=2 S=512 n=8 p=64 ds=64
     b2, s2, n, p, ds = 2, 512, 8, 64, 64
@@ -45,10 +64,10 @@ def main(fast: bool = True):
     bs = jax.random.normal(k, (b2, s2, ds)) * 0.5
     cs = jax.random.normal(k, (b2, s2, ds)) * 0.5
     f2 = jax.jit(ssd_ref)
-    us = _bench(f2, xh, dt, a_log, bs, cs)
     q_chunk = 128
     flops2 = b2 * s2 * n * (2 * q_chunk * p + 4 * ds * p)
-    emit("kernel_ssd_scan_ref", us, f"tpu_roofline_us={flops2/PEAK*1e6:.1f}")
+    _emit(record, "kernel_ssd_scan_ref", _bench(f2, xh, dt, a_log, bs, cs),
+          flops2 / PEAK * 1e6)
 
     # fused linear: 1024x1024x1024
     m = 1024
@@ -56,9 +75,58 @@ def main(fast: bool = True):
     w = jax.random.normal(k, (m, m)) / 32
     bvec = jnp.zeros((m,))
     f3 = jax.jit(lambda a, b_, c: fused_linear_ref(a, b_, c, "relu"))
-    us = _bench(f3, x, w, bvec)
-    emit("kernel_fused_linear_ref", us, f"tpu_roofline_us={2*m**3/PEAK*1e6:.1f}")
+    _emit(record, "kernel_fused_linear_ref", _bench(f3, x, w, bvec),
+          2 * m**3 / PEAK * 1e6)
+
+
+def _backward(record: dict) -> None:
+    k = jax.random.PRNGKey(1)
+    m = 1024
+    gemm_roof = 2 * m**3 / PEAK * 1e6
+    x = jax.random.normal(k, (m, m))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (m, m)) / 32
+    bvec = jnp.zeros((m,))
+    dy = jax.random.normal(jax.random.fold_in(k, 2), (m, m))
+    y = fused_linear_ref(x, w, bvec, "relu")
+
+    # the two backward contractions, relu mask fused (ref = CPU hot path;
+    # on TPU these become the transposed-operand Pallas kernels)
+    fdx = jax.jit(lambda d, w_, y_: fused_linear_bwd_dx_ref(d, w_, y_, "relu"))
+    _emit(record, "kernel_fused_linear_bwd_dx_ref", _bench(fdx, dy, w, y),
+          gemm_roof)
+    fdw = jax.jit(lambda x_, d, y_: fused_linear_bwd_dw_db_ref(x_, d, y_,
+                                                               "relu"))
+    _emit(record, "kernel_fused_linear_bwd_dw_db_ref", _bench(fdw, x, dy, y),
+          gemm_roof)
+
+    # end-to-end training step of the op: value+grad through the custom VJP
+    # (fwd GEMM + dx + dw ≈ 3 GEMMs of work)
+    fstep = jax.jit(jax.grad(
+        lambda x_, w_, b_: fused_ops.linear(x_, w_, b_, activation="relu",
+                                            impl="ref").sum(),
+        argnums=(0, 1, 2)))
+    _emit(record, "kernel_fused_linear_grad_ref", _bench(fstep, x, w, bvec),
+          3 * gemm_roof)
+
+
+def main(fast: bool = True, backward: bool = False) -> None:
+    record: dict = {}
+    if backward:
+        _backward(record)
+    else:
+        _forward(record)
+    # merge with whatever section ran before, so fwd+bwd accumulate
+    out = ARTIFACTS / "benchmarks" / "kernel_bench.json"
+    payload = json.loads(out.read_text()) if out.exists() else {}
+    payload.update(record)
+    save_json("kernel_bench", payload)
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backward", action="store_true",
+                    help="bench the fused_linear backward contractions")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(fast=not args.full, backward=args.backward)

@@ -10,14 +10,25 @@ import argparse
 import sys
 import traceback
 
+# (name, module, extra main() kwargs, description) — `--only NAME` and
+# `--list` use the name; several names may share one module.
 BENCHES = [
-    ("table2_costmodel", "Table II layer-level FLOPs model vs XLA"),
-    ("kernel_bench", "Pallas-kernel reference micro-benchmarks"),
-    ("fl_round_bench", "Cohort engine vs sequential FL round (speedup)"),
-    ("theorem2_tradeoff", "Theorem 2 [O(1/V), O(sqrt V)] trade-off"),
-    ("fig2_participation", "Fig 2 derived vs experimental participation"),
-    ("fig456_schedulers", "Figs 4-6 DDSRA vs baselines"),
-    ("roofline_report", "Roofline table from dry-run artifacts"),
+    ("table2_costmodel", "table2_costmodel", {},
+     "Table II layer-level FLOPs model vs XLA"),
+    ("kernel_bench", "kernel_bench", {},
+     "Pallas-kernel reference micro-benchmarks (forward)"),
+    ("kernel_bench --backward", "kernel_bench", {"backward": True},
+     "fused_linear backward (dx / dw+db / grad) micro-benchmarks"),
+    ("fl_round_bench", "fl_round_bench", {},
+     "Cohort engine vs sequential FL round (speedup)"),
+    ("theorem2_tradeoff", "theorem2_tradeoff", {},
+     "Theorem 2 [O(1/V), O(sqrt V)] trade-off"),
+    ("fig2_participation", "fig2_participation", {},
+     "Fig 2 derived vs experimental participation"),
+    ("fig456_schedulers", "fig456_schedulers", {},
+     "Figs 4-6 DDSRA vs baselines"),
+    ("roofline_report", "roofline_report", {},
+     "Roofline table from dry-run artifacts"),
 ]
 
 
@@ -31,23 +42,23 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.list:
-        for mod_name, desc in BENCHES:
-            print(f"{mod_name:20s} {desc}")
+        for name, _, _, desc in BENCHES:
+            print(f"{name:24s} {desc}")
         return
-    if args.only and args.only not in {name for name, _ in BENCHES}:
+    if args.only and args.only not in {name for name, _, _, _ in BENCHES}:
         ap.error(f"unknown benchmark {args.only!r} (see --list)")
 
     failures = []
-    for mod_name, desc in BENCHES:
-        if args.only and args.only != mod_name:
+    for name, mod_name, kwargs, desc in BENCHES:
+        if args.only and args.only != name:
             continue
-        print(f"# {mod_name}: {desc}", flush=True)
+        print(f"# {name}: {desc}", flush=True)
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
-            mod.main(fast=not args.full)
+            mod.main(fast=not args.full, **kwargs)
         except Exception:  # noqa: BLE001
             traceback.print_exc()
-            failures.append(mod_name)
+            failures.append(name)
     if failures:
         print(f"FAILED: {failures}")
         sys.exit(1)

@@ -1,3 +1,5 @@
-from repro.checkpoint.store import load_pytree, save_pytree, latest_step
+from repro.checkpoint.store import (all_steps, gc_steps, latest_step,
+                                    load_pytree, save_pytree)
 
-__all__ = ["save_pytree", "load_pytree", "latest_step"]
+__all__ = ["save_pytree", "load_pytree", "latest_step", "all_steps",
+           "gc_steps"]

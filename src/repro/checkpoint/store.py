@@ -16,22 +16,45 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _escape_segment(seg: str) -> str:
+    """Escape the path separator inside one key segment, so dict keys that
+    themselves contain ``/`` (e.g. ``{"a/b": ...}``) can never collide with
+    genuine nesting (``{"a": {"b": ...}}``) in the flat ``.npz`` namespace."""
+    return seg.replace("\\", "\\\\").replace("/", "\\/")
+
+
 def _paths_and_leaves(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = "/".join(_escape_segment(str(getattr(p, "key",
+                                                   getattr(p, "idx", p))))
+                       for p in path)
         out.append((key, leaf))
     return out
 
 
-def save_pytree(path, tree, step: Optional[int] = None) -> pathlib.Path:
+def save_pytree(path, tree, step: Optional[int] = None,
+                keep_last: Optional[int] = None) -> pathlib.Path:
+    """Write ``tree`` under ``path``; with ``step``, as ``step_NNNNNNNN.npz``.
+
+    ``keep_last`` rotates stepped checkpoints: after a successful write,
+    only the ``keep_last`` newest ``step_*`` files (counting this one) are
+    kept and older ones are deleted — long runs no longer grow the
+    checkpoint directory without bound. The step just written is never
+    deleted, even if the directory holds stale higher-numbered steps from
+    an earlier, longer run.
+    """
+    if keep_last is not None and keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
     path = pathlib.Path(path)
     path.mkdir(parents=True, exist_ok=True)
     fname = path / (f"step_{step:08d}.npz" if step is not None else "ckpt.npz")
     arrays = {}
     meta = {}
     for key, leaf in _paths_and_leaves(tree):
+        if key in arrays:
+            raise ValueError(f"duplicate checkpoint key {key!r}")
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:
             meta[key] = "bfloat16"
@@ -39,7 +62,31 @@ def save_pytree(path, tree, step: Optional[int] = None) -> pathlib.Path:
         arrays[key] = arr
     np.savez(fname, **arrays)
     (fname.with_suffix(".json")).write_text(json.dumps(meta))
+    if step is not None and keep_last is not None:
+        gc_steps(path, keep_last, protect=step)
     return fname
+
+
+def all_steps(path) -> list:
+    """Sorted step numbers of every ``step_*.npz`` under ``path``."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return []
+    return sorted(int(m.group(1)) for f in path.glob("step_*.npz")
+                  if (m := re.match(r"step_(\d+)\.npz", f.name)))
+
+
+def gc_steps(path, keep_last: int, protect: Optional[int] = None) -> list:
+    """Delete all but the ``keep_last`` newest ``step_*`` checkpoint pairs
+    under ``path`` (and never ``protect``); returns the deleted steps."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    path = pathlib.Path(path)
+    dropped = [s for s in all_steps(path)[:-keep_last] if s != protect]
+    for s in dropped:
+        (path / f"step_{s:08d}.npz").unlink(missing_ok=True)
+        (path / f"step_{s:08d}.json").unlink(missing_ok=True)
+    return dropped
 
 
 def load_pytree(fname, like) -> Any:
@@ -56,9 +103,5 @@ def load_pytree(fname, like) -> Any:
 
 
 def latest_step(path) -> Optional[int]:
-    path = pathlib.Path(path)
-    if not path.exists():
-        return None
-    steps = [int(m.group(1)) for f in path.glob("step_*.npz")
-             if (m := re.match(r"step_(\d+)\.npz", f.name))]
-    return max(steps) if steps else None
+    steps = all_steps(path)
+    return steps[-1] if steps else None

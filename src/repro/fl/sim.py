@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import re
 import time
 from typing import Dict, Iterator, List, Optional, Tuple, Type, Union
 
@@ -89,6 +90,7 @@ class Scenario:
     engine: str = "cohort"             # ENGINES key
     tiers: int = 1                     # tiered slot widths (1 = single width)
     mesh_shape: Optional[Tuple[int, ...]] = None   # cohort mesh (None = all)
+    keep_last: Optional[int] = None    # checkpoint rotation (None = keep all)
     net: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)
 
     def to_json(self) -> dict:
@@ -623,10 +625,20 @@ class Simulation:
 
     # -- checkpointing ---------------------------------------------------
 
-    def save(self, path) -> pathlib.Path:
-        """Checkpoint params + full run state at round ``self.t``."""
+    def save(self, path, keep_last: Optional[int] = None) -> pathlib.Path:
+        """Checkpoint params + full run state at round ``self.t``.
+
+        ``keep_last`` (default: ``Scenario.keep_last``) rotates the
+        checkpoint directory: after this save only the newest ``keep_last``
+        round checkpoints survive — the ``step_*.npz`` param files (GC'd by
+        ``store.save_pytree``) and their ``sim_*.json`` run-state manifests
+        alike — so per-round saving on long runs uses bounded disk.
+        """
+        if keep_last is None:
+            keep_last = self.scenario.keep_last
         path = pathlib.Path(path)
-        store.save_pytree(path, self.params, step=self.t)
+        store.save_pytree(path, self.params, step=self.t,
+                          keep_last=keep_last)
         pol = None
         if self._policy is not None:
             name = getattr(self._policy, "name", None)
@@ -652,6 +664,12 @@ class Simulation:
         }
         fname = path / f"sim_{self.t:08d}.json"
         fname.write_text(json.dumps(state))
+        if keep_last is not None:
+            kept = set(store.all_steps(path))   # post-GC param checkpoints
+            for f in path.glob("sim_*.json"):
+                m = re.match(r"sim_(\d+)\.json", f.name)
+                if m and int(m.group(1)) not in kept:
+                    f.unlink()
         return fname
 
     @classmethod

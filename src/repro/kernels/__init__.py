@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel stack — the compute hot-spots of the split-training path.
+
+Each subpackage is a (kernel.py, ops.py, ref.py) triple:
+
+* ``kernel.py`` — the Pallas TPU kernels themselves (grid/BlockSpec level);
+* ``ref.py`` — pure-jnp oracles with the same contraction structure (the
+  numerics baseline for tests and the CPU/GPU fallback);
+* ``ops.py`` — the differentiable public entry point that routes between
+  them (shape-alignment predicate, ``jax.custom_vjp``, impl selection).
+
+``fused_linear`` is the one the FL engines train through: forward
+``act(x @ w + b)`` plus a dedicated backward subsystem — a transposed-
+operand ``dz @ wᵀ`` kernel and an ``xᵀ @ dz`` kernel with the ``db``
+column-reduction fused in, both applying the relu activation mask inline
+from the saved output so ``dz``/``w.T``/``x.T`` are never materialized in
+HBM (design notes: ``docs/architecture.md``, "The kernel stack"). One
+shared ``kernel.tile_plan`` gates pallas-vs-ref routing for forward and
+both backward contractions. Set ``REPRO_FUSED_LINEAR_IMPL=interpret`` to
+execute the kernel bodies on CPU (CI does, for tests/test_kernels.py).
+
+Add new subpackages only for compute the paper itself optimizes with a
+custom kernel.
+"""

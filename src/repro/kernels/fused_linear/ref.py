@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for the fused linear kernel."""
+"""Pure-jnp oracles for the fused linear kernels (forward and backward).
+
+The backward references mirror the kernels' contraction structure —
+``dot_general`` with transposed *dimension numbers*, never a materialized
+``w.T``/``x.T`` — so they are both the numerics oracle for the Pallas
+kernels and the fast CPU fallback the op layer routes off-tile shapes to.
+"""
 from __future__ import annotations
 
 import jax
@@ -16,3 +22,33 @@ def fused_linear_ref(x: jax.Array, w: jax.Array, b: jax.Array,
                      activation: str = "relu") -> jax.Array:
     y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
     return ACTS[activation](y).astype(x.dtype)
+
+
+def _masked_dz(dy: jax.Array, y: jax.Array | None, mask: str) -> jax.Array:
+    """fp32 dz with the activation derivative applied from the saved output
+    (``mask="relu"``: dz = dy * (y > 0)); ``mask="none"`` passes dy through."""
+    dz = dy.astype(jnp.float32)
+    if mask == "relu":
+        dz = dz * (y > 0).astype(jnp.float32)
+    return dz
+
+
+def fused_linear_bwd_dx_ref(dy: jax.Array, w: jax.Array,
+                            y: jax.Array | None = None,
+                            mask: str = "none") -> jax.Array:
+    """dx (M, K) = (dy ⊙ mask(y)) @ wᵀ, as a trailing-axes contraction."""
+    dz = _masked_dz(dy, y, mask)
+    return jax.lax.dot_general(
+        dz, w.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(dy.dtype)
+
+
+def fused_linear_bwd_dw_db_ref(x: jax.Array, dy: jax.Array,
+                               y: jax.Array | None = None,
+                               mask: str = "none"):
+    """(dw, db) = (xᵀ @ dz, Σ_m dz), as a leading-axes contraction."""
+    dz = _masked_dz(dy, y, mask)
+    dw = jax.lax.dot_general(
+        x.astype(jnp.float32), dz, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    return dw, jnp.sum(dz, axis=0).astype(dy.dtype)

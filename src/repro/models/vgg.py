@@ -86,8 +86,10 @@ def _apply_layer(kind: str, layer: Dict[str, jax.Array], x: jax.Array) -> jax.Ar
     if kind in ("fc", "fc_last"):
         if x.ndim > 2:
             x = x.reshape(x.shape[0], -1)
-        # fused matmul+bias+activation (Pallas on TPU, jnp ref elsewhere)
-        # with a custom VJP, so split training exercises the kernel path.
+        # fused matmul+bias+activation through the custom VJP on every
+        # impl (dedicated Pallas fwd+bwd kernels on TPU/interpret,
+        # transpose-free dot_general refs elsewhere), so split training
+        # exercises the kernel path in both directions.
         act = "none" if kind == "fc_last" else "relu"
         return fused_ops.linear(x, layer["w"], layer["b"], activation=act)
     raise ValueError(kind)

@@ -1,5 +1,7 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
 (interpret=True executes the kernel bodies on CPU)."""
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +10,13 @@ import pytest
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ops import gqa_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.fused_linear.kernel import fused_linear
-from repro.kernels.fused_linear.ref import fused_linear_ref
+from repro.kernels.fused_linear import ops as fused_ops
+from repro.kernels.fused_linear.kernel import (fused_linear,
+                                               fused_linear_bwd_dw_db,
+                                               fused_linear_bwd_dx, tile_plan)
+from repro.kernels.fused_linear.ref import (fused_linear_bwd_dw_db_ref,
+                                            fused_linear_bwd_dx_ref,
+                                            fused_linear_ref)
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
 
@@ -144,3 +151,175 @@ def test_fused_linear_matches_ref(case, dtype):
                            b.astype(jnp.float32), act)
     np.testing.assert_allclose(out.astype(jnp.float32), ref,
                                atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# fused linear backward kernels (interpret mode runs the kernel bodies)
+# ---------------------------------------------------------------------------
+
+BWD_CASES = [
+    # (m, k, n, mask, bm, bn, bk) — non-square tiles included
+    (128, 128, 128, "relu", 128, 128, 128),
+    (256, 512, 128, "none", 128, 128, 128),
+    (64, 256, 512, "relu", 32, 128, 64),
+    (96, 160, 192, "relu", 48, 64, 32),
+    (128, 384, 256, "none", 64, 128, 128),
+]
+
+
+def _seed(obj) -> int:
+    """Deterministic across processes (str hashes are salted per run)."""
+    return zlib.crc32(repr(obj).encode())
+
+
+def _bwd_operands(case, dtype):
+    m, k, n, mask, _, _, _ = case
+    keys = jax.random.split(jax.random.PRNGKey(_seed(case)), 3)
+    x = _rand(keys[0], (m, k), dtype)
+    w = (_rand(keys[1], (k, n), jnp.float32) / np.sqrt(k)).astype(dtype)
+    dy = _rand(keys[2], (m, n), dtype)
+    y = fused_linear_ref(x, w, jnp.zeros((n,), dtype), "relu") \
+        if mask == "relu" else None
+    return x, w, dy, y
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", BWD_CASES)
+def test_bwd_dx_kernel_matches_ref(case, dtype):
+    m, k, n, mask, bm, bn, bk = case
+    x, w, dy, y = _bwd_operands(case, dtype)
+    out = fused_linear_bwd_dx(dy, w, y, mask=mask, block_m=bm, block_n=bn,
+                              block_k=bk, interpret=True)
+    ref = fused_linear_bwd_dx_ref(dy.astype(jnp.float32),
+                                  w.astype(jnp.float32),
+                                  None if y is None else y.astype(jnp.float32),
+                                  mask=mask)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref,
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", BWD_CASES)
+def test_bwd_dw_db_kernel_matches_ref(case, dtype):
+    m, k, n, mask, bm, bn, bk = case
+    x, w, dy, y = _bwd_operands(case, dtype)
+    dw, db = fused_linear_bwd_dw_db(x, dy, y, mask=mask, block_m=bm,
+                                    block_n=bn, block_k=bk, interpret=True)
+    dw_ref, db_ref = fused_linear_bwd_dw_db_ref(
+        x.astype(jnp.float32), dy.astype(jnp.float32),
+        None if y is None else y.astype(jnp.float32), mask=mask)
+    tol = {jnp.float32: 1e-4, jnp.bfloat16: 1e-1}[dtype]
+    np.testing.assert_allclose(dw.astype(jnp.float32), dw_ref,
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(db.astype(jnp.float32), db_ref,
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# the differentiable op: gradients through the Pallas path vs jax.grad(ref)
+# ---------------------------------------------------------------------------
+
+GRAD_SHAPES = [(128, 256, 128), (64, 128, 384)]   # tile-aligned, non-square
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["none", "relu", "silu", "gelu"])
+@pytest.mark.parametrize("shape", GRAD_SHAPES)
+def test_linear_grad_matches_ref_autodiff(shape, act, dtype):
+    """Interpret-mode gradient check: the custom-VJP backward kernels agree
+    with jax.grad of the pure-jnp oracle for every activation."""
+    m, k, n = shape
+    keys = jax.random.split(jax.random.PRNGKey(_seed((shape, act))), 4)
+    x = _rand(keys[0], (m, k), dtype)
+    w = (_rand(keys[1], (k, n), jnp.float32) / np.sqrt(k)).astype(dtype)
+    b = _rand(keys[2], (n,), dtype)
+    ct = _rand(keys[3], (m, n), jnp.float32)
+
+    def loss_kernel(x, w, b):
+        y = fused_ops.linear(x, w, b, activation=act, impl="interpret")
+        return jnp.vdot(y.astype(jnp.float32), ct)
+
+    def loss_ref(x, w, b):
+        y = fused_linear_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                             b.astype(jnp.float32), act)
+        return jnp.vdot(y, ct)
+
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    tol = {jnp.float32: 1e-4, jnp.bfloat16: 1e-2}[dtype]
+    for g, r, name in zip(got, want, ("dx", "dw", "db")):
+        g, r = g.astype(jnp.float32), r.astype(jnp.float32)
+        # bf16 storage quantizes large-scale grads to ~1e-2 relative either
+        # way, so its atol scales with the gradient's own magnitude; f32
+        # holds the strict 1e-4.
+        scale = 1.0 if dtype == jnp.float32 \
+            else max(1.0, float(jnp.max(jnp.abs(r))))
+        np.testing.assert_allclose(g, r, atol=tol * scale, rtol=tol,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu"])
+def test_linear_backward_contains_no_transpose(act):
+    """The training-path jaxpr of the Pallas/interpret impl must carry the
+    operand transposes in BlockSpec index maps / dot_general dimension
+    numbers only — no transpose primitive on w or x anywhere."""
+    x = jnp.ones((128, 256))
+    w = jnp.ones((256, 128))
+    b = jnp.ones((128,))
+
+    def loss(x, w, b):
+        return fused_ops.linear(x, w, b, activation=act,
+                                impl="interpret").sum()
+
+    jaxpr = str(jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(x, w, b))
+    assert "transpose" not in jaxpr
+    # the ref fallback keeps the same property (dot_general dim numbers)
+    def loss_ref(x, w, b):
+        return fused_ops.linear(x, w, b, activation=act, impl="ref").sum()
+    assert "transpose" not in str(
+        jax.make_jaxpr(jax.grad(loss_ref, argnums=(0, 1, 2)))(x, w, b))
+
+
+# ---------------------------------------------------------------------------
+# tile_plan: the one shared clamping/alignment rule + the routing boundary
+# ---------------------------------------------------------------------------
+
+def test_tile_plan_clamps_per_dim_and_gates_kernels():
+    plan = tile_plan(100, 300, 128)
+    assert (plan.block_m, plan.block_k, plan.block_n) == (100, 128, 128)
+    assert not plan.aligned            # 300 % 128 != 0
+    assert tile_plan(100, 256, 128).aligned     # 100 clamps to one block
+    assert tile_plan(127, 127, 127).aligned     # single full-size block
+    assert not tile_plan(129, 128, 128).aligned
+
+
+OFF_TILE = [127, 128, 129]
+
+
+@pytest.mark.parametrize("act", ["relu", "silu"])
+@pytest.mark.parametrize("m", OFF_TILE)
+@pytest.mark.parametrize("k", OFF_TILE)
+@pytest.mark.parametrize("n", OFF_TILE)
+def test_routing_boundary_off_tile_shapes(m, k, n, act):
+    """Property: whichever side of the pallas↔ref boundary tile_plan routes
+    to, forward and all three backward contractions are correct — the exact
+    shapes (127/129) that straddle the 128-tile alignment rule."""
+    keys = jax.random.split(jax.random.PRNGKey(m * 10007 + k * 101 + n), 3)
+    x = _rand(keys[0], (m, k), jnp.float32)
+    w = _rand(keys[1], (k, n), jnp.float32) / np.sqrt(k)
+    b = _rand(keys[2], (n,), jnp.float32)
+
+    def loss_kernel(x, w, b):
+        return fused_ops.linear(x, w, b, activation=act,
+                                impl="interpret").sum()
+
+    def loss_ref(x, w, b):
+        return fused_linear_ref(x, w, b, act).sum()
+
+    np.testing.assert_allclose(
+        fused_ops.linear(x, w, b, activation=act, impl="interpret"),
+        fused_linear_ref(x, w, b, act), atol=1e-4, rtol=1e-4)
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for g, r, name in zip(got, want, ("dx", "dw", "db")):
+        np.testing.assert_allclose(g, r, atol=1e-4, rtol=1e-4, err_msg=name)

@@ -233,6 +233,36 @@ def test_resume_without_checkpoint_raises(tmp_path):
         Simulation.resume(tmp_path)
 
 
+def test_save_keep_last_rotates_and_resumes(tmp_path):
+    """Per-round saving with ``keep_last`` keeps disk bounded (both the
+    ``step_*`` param files and the ``sim_*`` manifests) and the run still
+    resumes bit-identically from the newest surviving checkpoint."""
+    sc = _scenario(rounds=5, keep_last=2)      # threaded via Scenario
+    assert Scenario.from_json(sc.to_json()).keep_last == 2
+
+    uninterrupted = Simulation(sc)
+    full = list(uninterrupted.rounds("round_robin"))
+
+    sim = Simulation(sc)
+    it = sim.rounds("round_robin")
+    for _ in range(3):
+        next(it)
+        sim.save(tmp_path)                     # keep_last from the Scenario
+    npz = sorted(f.name for f in tmp_path.glob("step_*.npz"))
+    manifests = sorted(f.name for f in tmp_path.glob("sim_*.json"))
+    assert npz == ["step_00000002.npz", "step_00000003.npz"]
+    assert manifests == ["sim_00000002.json", "sim_00000003.json"]
+
+    resumed = Simulation.resume(tmp_path)      # round-1 files are GC'd
+    assert resumed.t == 3
+    tail = list(resumed.rounds())
+    for a, b in zip(full[3:], tail):
+        _records_equal(a, b)
+    for x, y in zip(jax.tree.leaves(uninterrupted.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 def test_resume_skips_stats_estimation_and_matches(tmp_path):
     sim = Simulation(_scenario())
     next(sim.rounds("ddsra"))

@@ -25,6 +25,47 @@ def test_checkpoint_roundtrip(tmp_path):
     assert latest_step(tmp_path) == 7
 
 
+def test_checkpoint_slash_keys_do_not_collide(tmp_path):
+    """Regression: ``{"a/b": ...}`` and ``{"a": {"b": ...}}`` used to flatten
+    to the same ``a/b`` npz key, silently clobbering one leaf."""
+    tree = {"a/b": jnp.full((2,), 1.0),
+            "a": {"b": jnp.full((2,), 2.0)}}
+    f = save_pytree(tmp_path, tree, step=0)
+    restored = load_pytree(f, tree)
+    np.testing.assert_array_equal(restored["a/b"], tree["a/b"])
+    np.testing.assert_array_equal(restored["a"]["b"], tree["a"]["b"])
+
+
+def test_checkpoint_keep_last_rotation(tmp_path):
+    from repro.checkpoint import all_steps
+    tree = {"w": jnp.arange(4.0)}
+    for step in range(5):
+        save_pytree(tmp_path, tree, step=step, keep_last=2)
+    assert all_steps(tmp_path) == [3, 4]
+    assert not (tmp_path / "step_00000000.npz").exists()
+    assert not (tmp_path / "step_00000000.json").exists()
+    assert latest_step(tmp_path) == 4
+    # the surviving newest checkpoint still restores
+    restored = load_pytree(tmp_path / "step_00000004.npz", tree)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    # invalid keep_last is rejected before anything is written
+    with pytest.raises(ValueError):
+        save_pytree(tmp_path, tree, step=9, keep_last=0)
+    assert not (tmp_path / "step_00000009.npz").exists()
+
+
+def test_checkpoint_rotation_never_deletes_current_step(tmp_path):
+    """Regression: a restarted run saving low step numbers into a directory
+    holding stale higher-numbered steps must not GC its own fresh write."""
+    tree = {"w": jnp.arange(4.0)}
+    save_pytree(tmp_path, tree, step=5)
+    save_pytree(tmp_path, tree, step=6)
+    f = save_pytree(tmp_path, tree, step=1, keep_last=2)
+    assert f.exists()
+    from repro.checkpoint import all_steps
+    assert 1 in all_steps(tmp_path)
+
+
 def test_lm_stream_deterministic_and_learnable():
     s1 = markov_stream(256, 32, 4, seed=3)
     s2 = markov_stream(256, 32, 4, seed=3)
