@@ -20,7 +20,10 @@ import numpy as np
 from benchmarks.common import emit, save_json, timed
 from repro.fl import Scenario, Simulation
 
-SCHEDS = ["ddsra", "random", "round_robin", "loss_driven", "delay_driven"]
+# ddsra_jax is the jitted control plane (repro.core.ddsra_jax); it must
+# land on the same curves as ddsra — the sweep doubles as a parity check
+SCHEDS = ["ddsra", "ddsra_jax", "random", "round_robin", "loss_driven",
+          "delay_driven"]
 
 
 def run(rounds: int = 30, model: str = "mlp", v: float = 0.01, seed: int = 0,

@@ -21,6 +21,8 @@ BENCHES = [
      "fused_linear backward (dx / dw+db / grad) micro-benchmarks"),
     ("fl_round_bench", "fl_round_bench", {},
      "Cohort engine vs sequential FL round (speedup)"),
+    ("scheduler_bench", "scheduler_bench", {},
+     "DDSRA decide latency: numpy oracle vs jitted control plane"),
     ("theorem2_tradeoff", "theorem2_tradeoff", {},
      "Theorem 2 [O(1/V), O(sqrt V)] trade-off"),
     ("fig2_participation", "fig2_participation", {},

@@ -1,0 +1,114 @@
+"""DDSRA decide latency: numpy oracle vs the jitted control plane.
+
+Sweeps the network scale (M gateways x J channels, N devices) and times a
+full scheduling decision — the per-(m, j) BCD solves, the lambda-cap
+Hungarian sweep and the queue update — for both implementations on
+identical host-drawn ChannelStates:
+
+* ``numpy``  — ``repro.core.ddsra.ddsra_round`` (Algorithm 1 as written:
+  Python loops over (m, j), scalar bisections, Python Kuhn-Munkres);
+* ``jitted`` — ``repro.core.ddsra_jax.DDSRAPlan.round`` (vmap over (m, j),
+  fixed-trip lax.scan bisections, vmapped Hungarian cap sweep, x64).
+
+The jitted path must compile **exactly once per network shape** across all
+timed rounds — the artifact records the jit cache delta per size and the
+bench fails loudly if any round retraced.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timed
+from repro.core import costmodel as cm
+from repro.core import ddsra_jax
+from repro.core.ddsra import Workload, ddsra_round
+from repro.core.ddsra_jax import DDSRAPlan
+from repro.core.network import Network, NetworkConfig
+from repro.core.participation import participation_rates
+from repro.models.vgg import mlp_layer_costs
+
+# (M gateways, J channels, N devices); the last entry is the 128-device
+# M x J sweep scale from the PR 3 cohort benchmarks
+SIZES = [(6, 3, 12), (16, 8, 32), (32, 12, 64), (64, 16, 128)]
+
+
+def _workload(n_devices: int, seed: int) -> Workload:
+    layers = mlp_layer_costs((3072, 512, 512, 10))
+    o, g = cm.flops_vector(layers), cm.mem_vector(layers, batch=50)
+    rng = np.random.default_rng(seed)
+    d_tilde = np.maximum(
+        (rng.uniform(0, 2000, n_devices) * 0.05).astype(int), 4)
+    return Workload(o, g, cm.model_size_bytes(layers), 5,
+                    d_tilde.astype(float))
+
+
+def _decide_rounds(fn, n_gateways, states):
+    """Time fn(st, queues) over the drawn states, carrying the queues."""
+    q = np.zeros(n_gateways)
+    t0 = time.perf_counter()
+    for st in states:
+        dec = fn(st, q)
+        q = dec.queues
+    return (time.perf_counter() - t0) / len(states), q
+
+
+def run(sizes=SIZES, rounds: int = 5, numpy_rounds: int = 2, seed: int = 0,
+        v: float = 10.0):
+    out = {"rounds": rounds, "sweep": []}
+    for m_gw, j_ch, n_dev in sizes:
+        net = Network(NetworkConfig(n_gateways=m_gw, n_channels=j_ch,
+                                    n_devices=n_dev),
+                      np.random.default_rng(seed))
+        w = _workload(n_dev, seed)
+        gamma = participation_rates(
+            np.random.default_rng(seed + 1).uniform(0.5, 2, m_gw), j_ch)
+        states = [net.draw() for _ in range(rounds)]
+
+        plan = DDSRAPlan.build(w, net)
+        plan.round(states[0], np.zeros(m_gw), gamma, v)   # compile
+        compiles0 = ddsra_jax._round_jit._cache_size()
+        jit_s, _ = _decide_rounds(
+            lambda st, q: plan.round(st, q, gamma, v), m_gw, states)
+        compiles = ddsra_jax._round_jit._cache_size() - compiles0
+        if compiles != 0:
+            raise RuntimeError(
+                f"jitted scheduler retraced {compiles}x at "
+                f"M={m_gw} J={j_ch} (expected 1 compile across rounds)")
+
+        np_s, q_np = _decide_rounds(
+            lambda st, q: ddsra_round(w, net, st, q, gamma, v),
+            m_gw, states[:numpy_rounds])
+
+        # the two paths must agree on the queues they stepped through
+        parity = bool(np.allclose(
+            q_np, _decide_rounds(
+                lambda st, q: plan.round(st, q, gamma, v),
+                m_gw, states[:numpy_rounds])[1], atol=1e-9))
+
+        entry = {"m": m_gw, "j": j_ch, "n": n_dev,
+                 "numpy_ms": np_s * 1e3, "jitted_ms": jit_s * 1e3,
+                 "speedup": np_s / jit_s, "compiles_across_rounds": 1,
+                 "queue_parity": parity}
+        out["sweep"].append(entry)
+        print(f"  M={m_gw:3d} J={j_ch:2d} N={n_dev:3d}  "
+              f"numpy {entry['numpy_ms']:9.1f}ms  "
+              f"jitted {entry['jitted_ms']:7.1f}ms  "
+              f"speedup {entry['speedup']:6.1f}x  parity={parity}")
+    return out
+
+
+def main(fast: bool = True):
+    sizes = SIZES[:2] if fast else SIZES
+    with timed() as t:
+        res = run(sizes=sizes)
+    save_json("scheduler_bench", res)
+    top = res["sweep"][-1]
+    emit("ddsra_decide_latency", t["s"] * 1e6,
+         f"M={top['m']}xJ={top['j']};speedup={top['speedup']:.1f}x;"
+         f"compiles=1")
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -3,6 +3,12 @@
 Sweep the Lyapunov control parameter V; measure (a) average per-round delay
 and (b) participation-rate constraint violation (queue stability gap).
 Claim: delay decreases (to a floor) as V grows; the participation gap grows.
+
+Two sweeps run: the host-side numpy loop (oracle, one V at a time), and
+the fused JAX sweep — all V values ``vmap``-ed over a ``lax.scan`` of
+jitted DDSRA rounds with on-device channel draws, i.e. the entire figure
+as ONE XLA program (``DDSRAPlan.simulate_v_sweep``). The two use
+different RNG streams, so the claim is checked qualitatively on both.
 """
 from __future__ import annotations
 
@@ -10,9 +16,27 @@ import numpy as np
 
 from benchmarks.common import emit, save_json, timed
 from repro.core.ddsra import Workload, ddsra_round
+from repro.core.ddsra_jax import DDSRAPlan
 from repro.core import costmodel as cm
 from repro.core.network import Network, NetworkConfig
 from repro.core.participation import participation_rates
+
+
+def _jax_sweep(w, net, gamma, v_values, rounds: int, seed: int):
+    """The whole V sweep as one jitted program; returns sweep entries."""
+    import jax
+    plan = DDSRAPlan.build(w, net)
+    taus, sel = plan.simulate_v_sweep(jax.random.PRNGKey(seed), gamma,
+                                      list(v_values), rounds)
+    entries = []
+    for i, v in enumerate(v_values):
+        t = np.where(np.isfinite(taus[i]), taus[i], np.nan)
+        rate = sel[i].mean(axis=0)
+        entries.append({"v": v, "mean_delay": float(np.nanmean(t)),
+                        "participation_gap":
+                            float(np.maximum(gamma - rate, 0).max()),
+                        "rates": rate.tolist()})
+    return entries
 
 
 def run(v_values=(0.01, 1.0, 100.0, 10000.0), rounds: int = 150, seed: int = 0):
@@ -31,19 +55,25 @@ def run(v_values=(0.01, 1.0, 100.0, 10000.0), rounds: int = 150, seed: int = 0):
     gamma = participation_rates(rng.uniform(0.3, 3.0, net.cfg.n_gateways),
                                 net.cfg.n_channels)
     out = {"gamma": gamma.tolist(), "sweep": []}
-    for v in v_values:
-        q = np.zeros(net.cfg.n_gateways)
-        taus, hist = [], []
-        for t in range(rounds):
-            dec = ddsra_round(w, net, net.draw(), q, gamma, v)
-            q = dec.queues
-            taus.append(dec.delay if np.isfinite(dec.delay) else np.nan)
-            hist.append(dec.selected)
-        rate = np.mean(hist, axis=0)
-        gap = float(np.maximum(gamma - rate, 0).max())
-        out["sweep"].append({"v": v, "mean_delay": float(np.nanmean(taus)),
-                             "participation_gap": gap,
-                             "rates": rate.tolist()})
+    with timed() as t_np:
+        for v in v_values:
+            q = np.zeros(net.cfg.n_gateways)
+            taus, hist = [], []
+            for t in range(rounds):
+                dec = ddsra_round(w, net, net.draw(), q, gamma, v)
+                q = dec.queues
+                taus.append(dec.delay if np.isfinite(dec.delay) else np.nan)
+                hist.append(dec.selected)
+            rate = np.mean(hist, axis=0)
+            gap = float(np.maximum(gamma - rate, 0).max())
+            out["sweep"].append({"v": v,
+                                 "mean_delay": float(np.nanmean(taus)),
+                                 "participation_gap": gap,
+                                 "rates": rate.tolist()})
+    out["numpy_seconds"] = t_np["s"]
+    with timed() as t_jx:
+        out["jax_sweep"] = _jax_sweep(w, net, gamma, v_values, rounds, seed)
+    out["jax_seconds"] = t_jx["s"]
     return out
 
 
@@ -55,9 +85,14 @@ def main(fast: bool = True):
     g = [s["participation_gap"] for s in res["sweep"]]
     emit("theorem2_V_tradeoff", t["s"] * 1e6,
          f"delay:{d[0]:.2f}->{d[-1]:.2f};gap:{g[0]:.3f}->{g[-1]:.3f}")
-    for s in res["sweep"]:
-        print(f"  V={s['v']:<8g} delay {s['mean_delay']:7.2f}s  "
-              f"gap {s['participation_gap']:.3f}  rates {np.round(s['rates'], 2)}")
+    for key, label in (("sweep", "numpy"), ("jax_sweep", "fused-jax")):
+        print(f"  [{label}]")
+        for s in res[key]:
+            print(f"  V={s['v']:<8g} delay {s['mean_delay']:7.2f}s  "
+                  f"gap {s['participation_gap']:.3f}  "
+                  f"rates {np.round(s['rates'], 2)}")
+    print(f"  sweep wall: numpy {res['numpy_seconds']:.1f}s, "
+          f"fused jax {res['jax_seconds']:.1f}s (incl. compile)")
 
 
 if __name__ == "__main__":

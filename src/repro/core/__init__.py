@@ -1,7 +1,12 @@
 """The paper's primary contribution: layer-level cost model, device-specific
-participation rate, and the DDSRA Lyapunov scheduler (+ baselines)."""
-from repro.core import costmodel, ddsra, hungarian, lyapunov, network
-from repro.core import participation, partition, schedulers
+participation rate, and the DDSRA Lyapunov scheduler (+ baselines).
 
-__all__ = ["costmodel", "ddsra", "hungarian", "lyapunov", "network",
-           "participation", "partition", "schedulers"]
+The control plane exists twice: ``ddsra`` is the host-side numpy oracle
+(Algorithm 1 as written), ``ddsra_jax`` the vectorized, jittable x64 port
+(one XLA program per scheduling round; registered as policy
+``"ddsra_jax"``)."""
+from repro.core import costmodel, ddsra, ddsra_jax, hungarian, lyapunov
+from repro.core import network, participation, partition, schedulers
+
+__all__ = ["costmodel", "ddsra", "ddsra_jax", "hungarian", "lyapunov",
+           "network", "participation", "partition", "schedulers"]

@@ -9,6 +9,13 @@ Per communication round:
   2. Channel assignment (26)-(29): iterate the auxiliary cap ``lambda`` with
      the Hungarian method on the composite cost Theta.
   3. Virtual queue update (14).
+
+This module is the host-side numpy implementation and serves as the
+**parity oracle** for the vectorized, jittable control plane in
+``repro.core.ddsra_jax`` (policy ``"ddsra_jax"``): the jitted port must
+emit identical assignments/selected sets and Lambda/tau within 1e-6
+(pinned in ``tests/test_ddsra_jax.py``). Change the semantics here and
+you are changing the contract there.
 """
 from __future__ import annotations
 

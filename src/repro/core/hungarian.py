@@ -3,12 +3,26 @@
 Used by DDSRA to solve the weighted bipartite channel-assignment problem
 (26)-(29): each of the J channels must be assigned to exactly one gateway
 (C3), each gateway takes at most one channel (C2).
+
+Two implementations of the *same* algorithm live here:
+
+* :func:`hungarian_min` / :func:`assign_channels` — the host-side numpy
+  oracle (the seed implementation, kept as the parity reference);
+* :func:`hungarian_min_jax` / :func:`assign_channels_jax` — a jittable
+  port that mirrors the numpy control flow step for step (``lax.fori_loop``
+  over rows, a bounded ``lax.while_loop`` for the alternating-tree growth,
+  a second ``while_loop`` for the augmenting-path unroll), so potentials,
+  argmin tie-breaks and therefore the *returned assignment* are identical
+  — not merely cost-optimal. ``jax.vmap``-able; the jitted DDSRA cap sweep
+  maps it over all Θ cost matrices at once.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 def hungarian_min(cost: np.ndarray) -> Tuple[np.ndarray, float]:
@@ -77,3 +91,84 @@ def assign_channels(theta: np.ndarray) -> np.ndarray:
     for ch, gw in enumerate(col_of_row):
         eye[gw, ch] = 1.0
     return eye
+
+
+# ---------------------------------------------------------------------------
+# jittable port (identical control flow -> identical assignments)
+# ---------------------------------------------------------------------------
+
+
+def hungarian_min_jax(cost) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Jittable :func:`hungarian_min`: same potentials algorithm, same
+    tie-breaks (first-minimum ``argmin``), traceable under ``jit``/``vmap``.
+
+    cost: (R, C) with R <= C (static shapes). Returns
+    (col_of_row (R,) int32, total_cost scalar).
+    """
+    cost = jnp.asarray(cost)
+    r, c = cost.shape
+    assert r <= c, "rows must be <= cols (pad the caller otherwise)"
+    inf = jnp.asarray(1e30, cost.dtype)
+
+    def row_step(i, carry):
+        u, v, p, way = carry
+        p = p.at[0].set(i)
+
+        def grow(st):
+            """One alternating-tree extension (the numpy inner while body)."""
+            j0, minv, used, u, v, p, way = st
+            used = used.at[j0].set(True)
+            i0 = p[j0]
+            free = ~used[1:]
+            # relax all free columns against row i0 at once
+            cur = cost[i0 - 1, :] - u[i0] - v[1:]
+            better = free & (cur < minv[1:])
+            minv = minv.at[1:].set(jnp.where(better, cur, minv[1:]))
+            way = way.at[1:].set(jnp.where(better, j0, way[1:]))
+            # masked argmin picks the next column to add to the tree
+            masked = jnp.where(free, minv[1:], inf)
+            j1 = jnp.argmin(masked).astype(jnp.int32) + 1
+            delta = masked[j1 - 1]
+            # update potentials (matched rows of used columns are distinct,
+            # so the scatter-add touches each row at most once; unused
+            # columns contribute an exact 0)
+            u = u.at[p].add(jnp.where(used, delta, 0.0))
+            v = v - jnp.where(used, delta, 0.0)
+            minv = minv.at[1:].set(jnp.where(free, minv[1:] - delta,
+                                             minv[1:]))
+            return (j1, minv, used, u, v, p, way)
+
+        st = grow((jnp.int32(0), jnp.full(c + 1, inf),
+                   jnp.zeros(c + 1, bool), u, v, p, way))
+        j0, _, _, u, v, p, way = lax.while_loop(
+            lambda s: s[5][s[0]] != 0, grow, st)
+
+        def unroll(st):                    # augment: p[j0] = p[way[j0]]
+            j0, p = st
+            j1 = way[j0]
+            return (j1, p.at[j0].set(p[j1]))
+
+        _, p = lax.while_loop(lambda s: s[0] != 0, unroll, (j0, p))
+        return (u, v, p, way)
+
+    u = jnp.zeros(r + 1, cost.dtype)
+    v = jnp.zeros(c + 1, cost.dtype)
+    p = jnp.zeros(c + 1, jnp.int32)        # p[col] = row matched (1-based)
+    way = jnp.zeros(c + 1, jnp.int32)
+    u, v, p, way = lax.fori_loop(1, r + 1, row_step, (u, v, p, way))
+
+    # p[1:][j] > 0 means column j matched to row p-1; scatter col index back
+    rows = jnp.where(p[1:] > 0, p[1:] - 1, r)          # r = out of range
+    col_of_row = (jnp.full(r, -1, jnp.int32)
+                  .at[rows].set(jnp.arange(c, dtype=jnp.int32), mode="drop"))
+    total = cost[jnp.arange(r), col_of_row].sum()
+    return col_of_row, total
+
+
+def assign_channels_jax(theta) -> jnp.ndarray:
+    """Jittable :func:`assign_channels`: theta (M, J) -> I (M, J) in {0,1}."""
+    m, j = theta.shape
+    assert j <= m, "need at least as many gateways as channels"
+    col_of_row, _ = hungarian_min_jax(theta.T)   # (J,) gateway per channel
+    eye = jnp.zeros((m, j), theta.dtype)
+    return eye.at[col_of_row, jnp.arange(j)].set(1.0)

@@ -1,12 +1,24 @@
-"""Lyapunov virtual queues and drift-plus-penalty (paper Sec. V-A)."""
+"""Lyapunov virtual queues and drift-plus-penalty (paper Sec. V-A).
+
+``update_queues`` is the host-side (numpy) update used by the oracle
+scheduler; ``update_queues_jax`` is its traced twin, used inside the
+jitted DDSRA round (``repro.core.ddsra_jax``) so the queue recursion can
+stay device-resident across a whole ``lax.scan``-ed run.
+"""
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
 def update_queues(q: np.ndarray, selected: np.ndarray, gamma: np.ndarray) -> np.ndarray:
     """Eq. (14): Q_m(t+1) = max(Q_m(t) - 1_m^t + Gamma_m, 0)."""
     return np.maximum(q - selected.astype(float) + gamma, 0.0)
+
+
+def update_queues_jax(q, selected, gamma):
+    """Traced Eq. (14) (``selected`` may be bool; promoted like the oracle)."""
+    return jnp.maximum(q - selected.astype(q.dtype) + gamma, 0.0)
 
 
 def drift_plus_penalty(v: float, tau: float, q: np.ndarray,

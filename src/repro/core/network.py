@@ -1,8 +1,11 @@
 """Wireless channel + energy model (paper Sec. III-C).
 
 IID block-fading channels, OFDM uplink/downlink between gateways and the BS,
-energy-harvesting arrivals at devices and gateways. Pure numpy — this is the
-simulation environment the scheduler acts in.
+energy-harvesting arrivals at devices and gateways. The simulation
+environment is host-side numpy (``Network.draw``); :func:`draw_state_jax`
+is the same law expressed with ``jax.random`` (different stream), used by
+the jitted control plane (``repro.core.ddsra_jax``) when whole sweeps stay
+device-resident.
 """
 from __future__ import annotations
 
@@ -113,3 +116,30 @@ class Network:
     def uplink_energy(self, m: int, j: int, p: float, gamma: float, st: ChannelState) -> float:
         """Eq. (8)."""
         return p * self.uplink_time(m, j, p, gamma, st)
+
+
+def draw_state_jax(key, path, n_channels: int, n_devices: int, *,
+                   e_dev_max, e_gw_max, i_up_var, i_down_var):
+    """``Network.draw`` with ``jax.random``: same distributions (exponential
+    fading on the path-loss factor, folded-normal interference, uniform
+    energy arrivals), traced so a scheduling round can consume the draw
+    without leaving device memory. ``path`` is the (M,) per-gateway
+    path-loss factor ``h0 * (d0 / dist)^nu``. Returns the six ChannelState
+    arrays as a tuple (h_up, h_down, i_up, i_down, e_dev, e_gw).
+
+    The stream differs from the numpy generator's, so this is for fully
+    fused sweeps (e.g. the vmapped V sweep), not oracle-parity runs.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    m_gw = path.shape[0]
+    k = jax.random.split(key, 6)
+    shape = (m_gw, n_channels)
+    h_up = path[:, None] * jax.random.exponential(k[0], shape)
+    h_down = path[:, None] * jax.random.exponential(k[1], shape)
+    i_up = jnp.abs(jax.random.normal(k[2], shape) * jnp.sqrt(i_up_var))
+    i_down = jnp.abs(jax.random.normal(k[3], shape) * jnp.sqrt(i_down_var))
+    e_dev = jax.random.uniform(k[4], (n_devices,)) * e_dev_max
+    e_gw = jax.random.uniform(k[5], (m_gw,)) * e_gw_max
+    return h_up, h_down, i_up, i_down, e_dev, e_gw

@@ -161,10 +161,41 @@ def set_policy_state(policy, state: Optional[dict]) -> None:
 
 @register_policy("ddsra")
 class DDSRAScheduler:
+    """The paper's Algorithm 1, host-side numpy (the parity oracle)."""
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
         return ddsra_round(ctx.workload, ctx.net, ctx.state, ctx.queues,
                            ctx.gamma_rates, ctx.v)
+
+
+@register_policy("ddsra_jax")
+class DDSRAJaxScheduler:
+    """Algorithm 1 as one jitted x64 XLA program per round.
+
+    Vectorizes the per-(m, j) solves with ``vmap``, the bisections with
+    fixed-trip ``lax.scan`` and the lambda-cap assignment sweep with the
+    jittable Hungarian (see ``repro.core.ddsra_jax``). Emits the same
+    :class:`RoundDecision` as ``"ddsra"`` — identical assignments, Lambda
+    and tau to ~1e-6 — while compiling exactly once per network shape.
+    """
+
+    def __init__(self):
+        self._plans: Dict[int, Tuple[Any, Any, Any]] = {}
+
+    def _plan(self, ctx: RoundContext):
+        """One DDSRAPlan per (net, workload) pair, keyed by identity (both
+        are built once per Simulation and reused across rounds)."""
+        from repro.core.ddsra_jax import DDSRAPlan
+        key = (id(ctx.net), id(ctx.workload))
+        hit = self._plans.get(key)
+        if hit is None or hit[0] is not ctx.net or hit[1] is not ctx.workload:
+            self._plans[key] = (ctx.net, ctx.workload,
+                                DDSRAPlan.build(ctx.workload, ctx.net))
+        return self._plans[key][2]
+
+    def schedule(self, ctx: RoundContext) -> RoundDecision:
+        return self._plan(ctx).round(ctx.state, ctx.queues,
+                                     ctx.gamma_rates, ctx.v)
 
 
 @register_policy("random", kwargs=("seed",))

@@ -123,19 +123,27 @@ class CohortLayout:
     tier_widths: Tuple[int, ...]    # padded batch width per tier (descending)
     tier_slots: Tuple[int, ...]     # number of slots per tier
 
+    #: candidate tier counts scanned by ``tiers="auto"`` (bounds the number
+    #: of vmap segments — and therefore compile time — the fused round pays)
+    AUTO_MAX_TIERS = 8
+
     @classmethod
     def build(cls, d_tilde: np.ndarray, capacity: Optional[int] = None,
-              tiers: int = 1, shard_count: int = 1) -> "CohortLayout":
+              tiers=1, shard_count: int = 1) -> "CohortLayout":
         """Derive a layout from the global per-device batch sizes.
 
         ``capacity``: number of (pre-padding) slots — the most devices a
         round can schedule (defaults to all devices). ``tiers``: how many
-        distinct widths to use (1 reproduces the single-width contract).
-        ``shard_count``: round every tier's slot count up to this multiple.
+        distinct widths to use (1 reproduces the single-width contract), or
+        ``"auto"`` to pick the count from the d_tilde histogram (see
+        :meth:`auto_tiers`). ``shard_count``: round every tier's slot count
+        up to this multiple.
         """
         widths = np.sort(np.asarray(d_tilde, dtype=int))[::-1]
         capacity = len(widths) if capacity is None else int(capacity)
         assert 1 <= capacity <= len(widths), (capacity, len(widths))
+        if tiers == "auto":
+            tiers = cls.auto_tiers(d_tilde, capacity, shard_count)
         tiers = max(1, min(int(tiers), capacity))
         groups = np.array_split(np.arange(capacity), tiers)
         tier_widths, tier_slots = [], []
@@ -144,6 +152,28 @@ class CohortLayout:
             n_slots = -(-len(g) // shard_count) * shard_count
             tier_slots.append(int(n_slots))
         return cls(tuple(tier_widths), tuple(tier_slots))
+
+    @classmethod
+    def auto_tiers(cls, d_tilde: np.ndarray, capacity: Optional[int] = None,
+                   shard_count: int = 1) -> int:
+        """Pick a tier count from the padded-samples curve.
+
+        Evaluates ``padded_samples`` for every candidate tier count
+        ``1..min(capacity, AUTO_MAX_TIERS)`` and returns the smallest count
+        reaching the curve's floor — the elbow where extra tiers stop
+        paying for their extra vmap segments. ``array_split`` groupings are
+        not nested, so the curve is *not* monotone (and ``shard_count``
+        rounding can make more tiers strictly worse); taking the argmin of
+        the realized curve (ties -> fewest tiers) both rides the elbow and
+        guarantees auto never pads more than any manual choice among the
+        candidates — in particular the {1, 4}-tier baselines.
+        """
+        widths = np.asarray(d_tilde, dtype=int)
+        capacity = len(widths) if capacity is None else int(capacity)
+        candidates = range(1, min(capacity, cls.AUTO_MAX_TIERS) + 1)
+        padded = [cls.build(widths, capacity, t, shard_count).padded_samples
+                  for t in candidates]
+        return 1 + int(np.argmin(padded))
 
     @property
     def n_slots(self) -> int:

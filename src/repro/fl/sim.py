@@ -67,8 +67,8 @@ class Scenario:
     (``net``), the data distribution (``alpha``/``chi``/``max_dataset``),
     the model (a ``repro.models.registry`` name), local-training
     hyperparameters, the default policy/engine names, and the execution
-    layout for the cohort engines (``tiers`` tiered slot widths;
-    ``mesh_shape`` for the sharded engine's cohort mesh).
+    layout for the cohort engines (``tiers`` tiered slot widths — an int
+    or ``"auto"``; ``mesh_shape`` for the sharded engine's cohort mesh).
     ``to_json``/``from_json`` round-trip exactly, and checkpoints written
     before a field existed load with its default.
     """
@@ -88,7 +88,10 @@ class Scenario:
     chi: float = 1.0                   # non-IID degree
     sigma_samples: int = 8             # per-sample grads for sigma estimation
     engine: str = "cohort"             # ENGINES key
-    tiers: int = 1                     # tiered slot widths (1 = single width)
+    # tiered slot widths: an int (1 = single width) or "auto" to pick the
+    # tier count from the d_tilde histogram (CohortLayout.auto_tiers —
+    # smallest count reaching the padded-samples curve's floor)
+    tiers: Union[int, str] = 1
     mesh_shape: Optional[Tuple[int, ...]] = None   # cohort mesh (None = all)
     keep_last: Optional[int] = None    # checkpoint rotation (None = keep all)
     net: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)

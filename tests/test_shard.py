@@ -83,6 +83,43 @@ def test_tiered_layout_cuts_padded_samples():
     assert tiered.padded_samples < flat.padded_samples
 
 
+def test_auto_tiers_never_pads_more_than_manual_baselines():
+    """tiers="auto" on the bench layouts ({20, 64, 128} devices, the
+    fl_round_bench d_tilde distribution) must never pad more samples than
+    the manual 1- and 4-tier baselines, for unsharded and mesh-8 layouts."""
+    for n in (20, 64, 128):
+        rng = np.random.default_rng(1)            # Simulation's seed + 1
+        d_sizes = np.maximum(rng.uniform(0, 2000, n).astype(int), 40)
+        d_tilde = np.maximum((0.05 * d_sizes).astype(int), 4)
+        for shards in (1, 8):
+            auto = CohortLayout.build(d_tilde, tiers="auto",
+                                      shard_count=shards)
+            for manual in (1, 4):
+                base = CohortLayout.build(d_tilde, tiers=manual,
+                                          shard_count=shards)
+                assert auto.padded_samples <= base.padded_samples, \
+                    (n, shards, manual)
+            assert 1 <= len(auto.tier_widths) <= CohortLayout.AUTO_MAX_TIERS
+
+
+def test_auto_tiers_property():
+    """Random d_tilde/capacity/shard_count: auto is the best candidate
+    count (<= every manual choice up to AUTO_MAX_TIERS) and a valid int."""
+    rng = np.random.default_rng(5)
+    for _ in range(25):
+        n = int(rng.integers(4, 40))
+        d_tilde = rng.integers(4, 120, size=n)
+        capacity = int(rng.integers(1, n + 1))
+        shards = int(rng.integers(1, 4))
+        t_auto = CohortLayout.auto_tiers(d_tilde, capacity, shards)
+        auto = CohortLayout.build(d_tilde, capacity, "auto", shards)
+        assert auto == CohortLayout.build(d_tilde, capacity, t_auto, shards)
+        top = min(capacity, CohortLayout.AUTO_MAX_TIERS)
+        for manual in range(1, top + 1):
+            base = CohortLayout.build(d_tilde, capacity, manual, shards)
+            assert auto.padded_samples <= base.padded_samples
+
+
 def test_tiered_packing_property():
     """Every participating device's real samples land in exactly one slot;
     mask totals equal the true drawn batch sizes; empty slots stay empty."""

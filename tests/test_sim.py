@@ -99,6 +99,23 @@ def test_scenario_from_json_accepts_pre_mesh_checkpoints():
     assert sc.mesh_shape is None and sc.tiers == 1
 
 
+def test_scenario_auto_tiers_roundtrip_and_runs():
+    """tiers="auto" survives the JSON round-trip and drives a cohort run
+    (the layout is derived from the d_tilde histogram at build time)."""
+    sc = _scenario(tiers="auto")
+    assert Scenario.from_json(json.loads(json.dumps(sc.to_json()))) == sc
+    sim = Simulation(sc)
+    recs = list(sim.rounds("round_robin"))
+    assert len(recs) == sc.rounds
+    assert sim.padding_stats["padded_samples"] > 0
+    # the derived layout is at least as tight as the manual baselines
+    from repro.fl.data import CohortLayout
+    for manual in (1, 4):
+        base = CohortLayout.build(sim.d_tilde, sim.cohort_capacity, manual)
+        auto = CohortLayout.build(sim.d_tilde, sim.cohort_capacity, "auto")
+        assert auto.padded_samples <= base.padded_samples
+
+
 # ---------------------------------------------------------------------------
 # fair-sweep reset
 # ---------------------------------------------------------------------------
