@@ -1,15 +1,22 @@
-"""Kernel micro-benchmarks: µs/call of the jnp reference paths on CPU (the
-Pallas kernels target TPU; interpret-mode timing is not meaningful), plus an
-analytic MXU-roofline estimate of the kernel's TPU-side time.
+"""Kernel micro-benchmarks: µs/call of every implementation of the kernel
+stack, each row tagged with the implementation (``ref`` / ``interpret`` /
+``pallas``), the block plan the selection table chose, and its **roofline
+fraction** — ``tpu_roofline_us / us_per_call``, the fraction of the analytic
+MXU roofline the measured path achieves (the comparable number across
+backends; absolute CPU µs of a TPU kernel is not).
 
 ``--backward`` adds the fused_linear training-step contractions — the
 transposed-operand ``dx = dz @ wᵀ`` / ``(dw, db) = (xᵀ @ dz, Σ dz)`` refs
 and the end-to-end ``jax.grad`` of the custom-VJP ``linear`` op — i.e. the
 two-thirds of per-step FLOPs the backward subsystem moved onto kernels.
 
-Timings accumulate into ``artifacts/benchmarks/kernel_bench.json`` (the
-forward and backward sections merge, so either invocation order leaves
-both populated).
+``--autotune`` runs the block-shape sweeps (``repro.kernels.autotune``) over
+the benched shapes, persists the winners into the selection tables under
+``artifacts/autotune/`` and records each winner's speedup over the fixed
+clamped-128 plan in an ``autotune_*`` row.
+
+Timings accumulate into ``artifacts/benchmarks/kernel_bench.json`` (all
+sections merge, so any invocation order leaves them populated).
 """
 from __future__ import annotations
 
@@ -20,14 +27,24 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import ARTIFACTS, emit, save_json
+from repro.kernels import autotune
+from repro.kernels.flash_attention.ops import gqa_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.fused_linear import ops as fused_ops
 from repro.kernels.fused_linear.ref import (fused_linear_bwd_dw_db_ref,
                                             fused_linear_bwd_dx_ref,
                                             fused_linear_ref)
+from repro.kernels.ssd_scan.ops import ssd
 from repro.kernels.ssd_scan.ref import ssd_ref
 
 PEAK = 197e12
+
+# the shapes the kernel-path section benches and --autotune sweeps; the two
+# fused_linear GEMMs are deliberately non-square (the shapes where the fixed
+# 128^3 plan leaves the most on the table).
+GEMM_SHAPES = ((256, 512, 128), (512, 128, 256))
+ATTN_SHAPE = (1, 2, 256, 64)           # (B, H, S, hd), kernel layout
+SSD_SHAPE = (1, 256, 8, 64, 64)        # (B, S, n, p, ds)
 
 
 def _bench(fn, *args, iters: int = 5):
@@ -40,9 +57,30 @@ def _bench(fn, *args, iters: int = 5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def _emit(record: dict, name: str, us: float, roofline_us: float) -> None:
-    emit(name, us, f"tpu_roofline_us={roofline_us:.1f}")
-    record[name] = {"us_per_call": us, "tpu_roofline_us": roofline_us}
+def _row(record: dict, name: str, us: float, roofline_us: float, *,
+         impl: str, blocks=None, flops: float = None) -> None:
+    frac = roofline_us / us if us > 0 else 0.0
+    tag = f"roofline_frac={frac:.2e};impl={impl}"
+    if blocks is not None:
+        tag += ";blocks=" + "x".join(str(b) for b in blocks)
+    emit(name, us, tag)
+    record[name] = {
+        "us_per_call": us,
+        "tpu_roofline_us": roofline_us,
+        "roofline_frac": frac,
+        "impl": impl,
+        "blocks": list(blocks) if blocks is not None else None,
+        "flops": flops,
+    }
+
+
+def _gemm_inputs(m: int, k: int, n: int, key=0, dtype=jnp.float32):
+    kk = jax.random.PRNGKey(key)
+    x = jax.random.normal(kk, (m, k), jnp.float32).astype(dtype)
+    w = (jax.random.normal(jax.random.fold_in(kk, 1), (k, n), jnp.float32)
+         / 32).astype(dtype)
+    b = jnp.zeros((n,), dtype)
+    return x, w, b
 
 
 def _forward(record: dict) -> None:
@@ -53,8 +91,8 @@ def _forward(record: dict) -> None:
                                   jnp.float32) for i in range(3))
     f = jax.jit(lambda a, b_, c: attention_ref(a, b_, c, causal=True))
     flops = 4 * b * h * s * s * d / 2
-    _emit(record, "kernel_flash_attention_ref", _bench(f, q, kk, v),
-          flops / PEAK * 1e6)
+    _row(record, "kernel_flash_attention_ref", _bench(f, q, kk, v),
+         flops / PEAK * 1e6, impl="ref", flops=flops)
 
     # ssd scan: B=2 S=512 n=8 p=64 ds=64
     b2, s2, n, p, ds = 2, 512, 8, 64, 64
@@ -66,23 +104,23 @@ def _forward(record: dict) -> None:
     f2 = jax.jit(ssd_ref)
     q_chunk = 128
     flops2 = b2 * s2 * n * (2 * q_chunk * p + 4 * ds * p)
-    _emit(record, "kernel_ssd_scan_ref", _bench(f2, xh, dt, a_log, bs, cs),
-          flops2 / PEAK * 1e6)
+    _row(record, "kernel_ssd_scan_ref", _bench(f2, xh, dt, a_log, bs, cs),
+         flops2 / PEAK * 1e6, impl="ref", flops=flops2)
 
     # fused linear: 1024x1024x1024
     m = 1024
-    x = jax.random.normal(k, (m, m))
-    w = jax.random.normal(k, (m, m)) / 32
-    bvec = jnp.zeros((m,))
+    x, w, bvec = _gemm_inputs(m, m, m)
     f3 = jax.jit(lambda a, b_, c: fused_linear_ref(a, b_, c, "relu"))
-    _emit(record, "kernel_fused_linear_ref", _bench(f3, x, w, bvec),
-          2 * m**3 / PEAK * 1e6)
+    flops3 = 2 * m**3
+    _row(record, "kernel_fused_linear_ref", _bench(f3, x, w, bvec),
+         flops3 / PEAK * 1e6, impl="ref", flops=flops3)
 
 
 def _backward(record: dict) -> None:
     k = jax.random.PRNGKey(1)
     m = 1024
-    gemm_roof = 2 * m**3 / PEAK * 1e6
+    gemm_flops = 2 * m**3
+    gemm_roof = gemm_flops / PEAK * 1e6
     x = jax.random.normal(k, (m, m))
     w = jax.random.normal(jax.random.fold_in(k, 1), (m, m)) / 32
     bvec = jnp.zeros((m,))
@@ -92,12 +130,12 @@ def _backward(record: dict) -> None:
     # the two backward contractions, relu mask fused (ref = CPU hot path;
     # on TPU these become the transposed-operand Pallas kernels)
     fdx = jax.jit(lambda d, w_, y_: fused_linear_bwd_dx_ref(d, w_, y_, "relu"))
-    _emit(record, "kernel_fused_linear_bwd_dx_ref", _bench(fdx, dy, w, y),
-          gemm_roof)
+    _row(record, "kernel_fused_linear_bwd_dx_ref", _bench(fdx, dy, w, y),
+         gemm_roof, impl="ref", flops=gemm_flops)
     fdw = jax.jit(lambda x_, d, y_: fused_linear_bwd_dw_db_ref(x_, d, y_,
                                                                "relu"))
-    _emit(record, "kernel_fused_linear_bwd_dw_db_ref", _bench(fdw, x, dy, y),
-          gemm_roof)
+    _row(record, "kernel_fused_linear_bwd_dw_db_ref", _bench(fdw, x, dy, y),
+         gemm_roof, impl="ref", flops=gemm_flops)
 
     # end-to-end training step of the op: value+grad through the custom VJP
     # (fwd GEMM + dx + dw ≈ 3 GEMMs of work)
@@ -105,17 +143,99 @@ def _backward(record: dict) -> None:
         lambda x_, w_, b_: fused_ops.linear(x_, w_, b_, activation="relu",
                                             impl="ref").sum(),
         argnums=(0, 1, 2)))
-    _emit(record, "kernel_fused_linear_grad_ref", _bench(fstep, x, w, bvec),
-          3 * gemm_roof)
+    _row(record, "kernel_fused_linear_grad_ref", _bench(fstep, x, w, bvec),
+         3 * gemm_roof, impl="ref", flops=3 * gemm_flops)
 
 
-def main(fast: bool = True, backward: bool = False) -> None:
+def _kernel_paths(record: dict) -> None:
+    """Time the kernels through their real op-layer entry points — compiled
+    Pallas on TPU, the Pallas interpreter elsewhere — with whatever blocks
+    the selection table resolves, and tag the rows with both."""
+    impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    interpret = impl == "interpret"
+
+    for m, k, n in GEMM_SHAPES:
+        x, w, b = _gemm_inputs(m, k, n)
+        blocks = autotune.blocks_for("fused_linear", (m, k, n), "float32",
+                                     interpret=interpret)
+        fn = jax.jit(lambda a, b_, c: fused_ops.linear(a, b_, c,
+                                                       activation="relu",
+                                                       impl=impl))
+        flops = 2 * m * k * n
+        _row(record, f"kernel_fused_linear_{m}x{k}x{n}_{impl}",
+             _bench(fn, x, w, b, iters=3), flops / PEAK * 1e6,
+             impl=impl, blocks=blocks, flops=flops)
+
+    b, h, s, d = ATTN_SHAPE
+    kk = jax.random.PRNGKey(2)
+    # gqa_attention takes the model layout (B, S, H, hd)
+    q, kt, vt = (jax.random.normal(jax.random.fold_in(kk, i), (b, s, h, d))
+                 for i in range(3))
+    blocks = autotune.blocks_for("flash_attention", (b, h, s, d), "float32",
+                                 interpret=interpret)
+    fn = jax.jit(lambda a, b_, c: gqa_attention(a, b_, c, causal=True,
+                                                interpret=interpret))
+    flops = 4 * b * h * s * s * d / 2
+    _row(record, f"kernel_flash_attention_{impl}",
+         _bench(fn, q, kt, vt, iters=3), flops / PEAK * 1e6,
+         impl=impl, blocks=blocks, flops=flops)
+
+    b2, s2, n, p, ds = SSD_SHAPE
+    xh = jax.random.normal(kk, (b2, s2, n, p))
+    dt = jax.nn.softplus(jax.random.normal(kk, (b2, s2, n))) * 0.5
+    a_log = jax.random.normal(kk, (n,)) * 0.3
+    bs = jax.random.normal(kk, (b2, s2, ds)) * 0.5
+    cs = jax.random.normal(kk, (b2, s2, ds)) * 0.5
+    blocks = autotune.blocks_for("ssd_scan", SSD_SHAPE, "float32",
+                                 interpret=interpret)
+    fn = jax.jit(lambda *a: ssd(*a, interpret=interpret))
+    chunk = blocks[0]
+    flops2 = b2 * s2 * n * (2 * chunk * p + 4 * ds * p)
+    _row(record, f"kernel_ssd_scan_{impl}",
+         _bench(fn, xh, dt, a_log, bs, cs, iters=3), flops2 / PEAK * 1e6,
+         impl=impl, blocks=blocks, flops=flops2)
+
+
+def _autotune(record: dict) -> None:
+    """Sweep block shapes for the benched shapes, persist the winners to the
+    selection tables, and record each winner's speedup over the fixed
+    clamped-128 default plan."""
+    interpret = jax.default_backend() != "tpu"
+
+    def note(name: str, entry: dict) -> None:
+        if entry is None:
+            return
+        emit(name, entry["us"],
+             f"speedup_vs_default={entry['speedup_vs_default']:.2f};"
+             f"blocks=" + "x".join(str(b) for b in entry["blocks"]))
+        record[name] = dict(entry)
+
+    for m, k, n in GEMM_SHAPES:
+        note(f"autotune_fused_linear_{m}x{k}x{n}",
+             autotune.sweep_fused_linear(m, k, n, interpret=interpret))
+    # a bf16 entry for the mixed-precision data plane's hottest shape
+    m, k, n = GEMM_SHAPES[0]
+    note(f"autotune_fused_linear_{m}x{k}x{n}_bf16",
+         autotune.sweep_fused_linear(m, k, n, dtype="bfloat16",
+                                     interpret=interpret))
+    note("autotune_flash_attention",
+         autotune.sweep_flash_attention(*ATTN_SHAPE, interpret=interpret))
+    note("autotune_ssd_scan",
+         autotune.sweep_ssd_scan(*SSD_SHAPE, interpret=interpret))
+
+
+def main(fast: bool = True, backward: bool = False,
+         autotune_sweep: bool = False) -> None:
     record: dict = {}
-    if backward:
+    if autotune_sweep:
+        _autotune(record)
+        _kernel_paths(record)      # re-times the ops at the tuned blocks
+    elif backward:
         _backward(record)
     else:
         _forward(record)
-    # merge with whatever section ran before, so fwd+bwd accumulate
+        _kernel_paths(record)
+    # merge with whatever section ran before, so sections accumulate
     out = ARTIFACTS / "benchmarks" / "kernel_bench.json"
     payload = json.loads(out.read_text()) if out.exists() else {}
     payload.update(record)
@@ -127,6 +247,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backward", action="store_true",
                     help="bench the fused_linear backward contractions")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep block shapes and persist the winners to "
+                         "artifacts/autotune/")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
-    main(fast=not args.full, backward=args.backward)
+    main(fast=not args.full, backward=args.backward,
+         autotune_sweep=args.autotune)

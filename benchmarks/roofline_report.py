@@ -1,5 +1,8 @@
 """Roofline report: aggregates artifacts/dryrun/*.json into the per-
-(arch x shape x mesh) table consumed by EXPERIMENTS.md §Roofline."""
+(arch x shape x mesh) table consumed by EXPERIMENTS.md §Roofline, plus a
+kernel-stack section that converts ``kernel_bench.json`` rows into roofline
+*fractions* (``tpu_roofline_us / us_per_call`` — the backend-comparable
+number; the absolute µs of a ref/interpret row is CPU trivia)."""
 from __future__ import annotations
 
 import json
@@ -8,6 +11,7 @@ import pathlib
 from benchmarks.common import ARTIFACTS, emit, save_json
 
 DRYRUN = ARTIFACTS / "dryrun"
+KERNEL_BENCH = ARTIFACTS / "benchmarks" / "kernel_bench.json"
 
 
 def load_all():
@@ -35,23 +39,81 @@ def to_markdown(rows, mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
+def kernel_fractions() -> list:
+    """Per-row roofline fractions from ``kernel_bench.json`` (rows written
+    before the tagging scheme — plain us/roofline pairs — are upgraded on
+    the fly; ``autotune_*`` rows report speedup instead)."""
+    if not KERNEL_BENCH.exists():
+        return []
+    payload = json.loads(KERNEL_BENCH.read_text())
+    out = []
+    for name, row in sorted(payload.items()):
+        if not isinstance(row, dict):
+            continue
+        if "us_per_call" not in row and "us" not in row:
+            continue
+        us = float(row.get("us_per_call", row.get("us", 0.0)))
+        roof = float(row.get("tpu_roofline_us", 0.0))
+        frac = row.get("roofline_frac",
+                       roof / us if us > 0 else 0.0)
+        out.append({
+            "name": name,
+            "impl": row.get("impl", "ref"),
+            "blocks": row.get("blocks"),
+            "us_per_call": us,
+            "tpu_roofline_us": roof,
+            "roofline_frac": float(frac),
+            "speedup_vs_default": row.get("speedup_vs_default"),
+        })
+    return out
+
+
+def kernels_markdown(rows: list) -> str:
+    lines = [
+        "| kernel row | impl | blocks | µs/call | TPU roofline µs | "
+        "roofline frac | autotune speedup |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        blocks = "x".join(str(b) for b in r["blocks"]) if r["blocks"] else "—"
+        sp = f"{r['speedup_vs_default']:.2f}x" \
+            if r.get("speedup_vs_default") else "—"
+        lines.append(
+            f"| {r['name']} | {r['impl']} | {blocks} | "
+            f"{r['us_per_call']:.1f} | {r['tpu_roofline_us']:.2f} | "
+            f"{r['roofline_frac']:.2e} | {sp} |")
+    return "\n".join(lines)
+
+
 def main(fast: bool = True):
     rows = load_all()
-    if not rows:
+    if rows:
+        n1 = sum(r["mesh"] == "16x16" for r in rows)
+        n2 = sum(r["mesh"] == "2x16x16" for r in rows)
+        bounds = {}
+        for r in rows:
+            if r["mesh"] == "16x16":
+                bounds[r["roofline"]["bottleneck"]] = bounds.get(
+                    r["roofline"]["bottleneck"], 0) + 1
+        save_json("roofline_rows", rows)
+        (ARTIFACTS / "roofline_16x16.md").write_text(to_markdown(rows))
+        (ARTIFACTS / "roofline_2x16x16.md").write_text(
+            to_markdown(rows, "2x16x16"))
+        emit("roofline_table", 0.0,
+             f"1pod={n1}/40;2pod={n2}/40;bounds={bounds}")
+    else:
         emit("roofline_table", 0.0, "no dryrun artifacts yet")
-        return
-    n1 = sum(r["mesh"] == "16x16" for r in rows)
-    n2 = sum(r["mesh"] == "2x16x16" for r in rows)
-    bounds = {}
-    for r in rows:
-        if r["mesh"] == "16x16":
-            bounds[r["roofline"]["bottleneck"]] = bounds.get(
-                r["roofline"]["bottleneck"], 0) + 1
-    save_json("roofline_rows", rows)
-    (ARTIFACTS / "roofline_16x16.md").write_text(to_markdown(rows))
-    (ARTIFACTS / "roofline_2x16x16.md").write_text(to_markdown(rows, "2x16x16"))
-    emit("roofline_table", 0.0,
-         f"1pod={n1}/40;2pod={n2}/40;bounds={bounds}")
+
+    krows = kernel_fractions()
+    if krows:
+        save_json("roofline_kernels", krows)
+        (ARTIFACTS / "roofline_kernels.md").write_text(
+            kernels_markdown(krows) + "\n")
+        tuned = [r for r in krows if r.get("speedup_vs_default")]
+        emit("roofline_kernels", 0.0,
+             f"rows={len(krows)};tuned={len(tuned)}")
+    else:
+        emit("roofline_kernels", 0.0, "no kernel_bench artifact yet")
 
 
 if __name__ == "__main__":

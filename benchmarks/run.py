@@ -19,6 +19,8 @@ BENCHES = [
      "Pallas-kernel reference micro-benchmarks (forward)"),
     ("kernel_bench --backward", "kernel_bench", {"backward": True},
      "fused_linear backward (dx / dw+db / grad) micro-benchmarks"),
+    ("kernel_bench --autotune", "kernel_bench", {"autotune_sweep": True},
+     "block-shape sweeps -> artifacts/autotune selection tables"),
     ("fl_round_bench", "fl_round_bench", {},
      "Cohort engine vs sequential FL round (speedup)"),
     ("scheduler_bench", "scheduler_bench", {},

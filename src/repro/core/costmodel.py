@@ -29,6 +29,7 @@ class LayerCost:
     flops_bwd: float          # o'_l, per sample point
     mem_weights: float        # bytes (incl. gradient buffers where Table II says so)
     mem_act_per_sample: float # bytes per sample (fwd outputs + bwd errors)
+    sf: float = 4.0           # native precision, bytes/param (S_f in Table II)
 
     def flops(self) -> float:
         return self.flops_fwd + self.flops_bwd
@@ -54,7 +55,7 @@ def conv_layer(name: str, ci: int, hi: int, wi: int, co: int,
     acts = sf * (co * ho * wo + ci * hi * wi)                   # fwd out + bwd err
     return LayerCost(name, "conv", fwd, err + grad,
                      2 * weights,                               # weight + gradient
-                     acts)
+                     acts, sf=sf)
 
 
 def pool_layer(name: str, ci: int, hi: int, wi: int, k: int = 2,
@@ -63,7 +64,7 @@ def pool_layer(name: str, ci: int, hi: int, wi: int, k: int = 2,
     fwd = ci * hi * wi
     err = ci * hi * wi
     acts = sf * (ci * ho * wo + ci * hi * wi)
-    return LayerCost(name, "pool", fwd, err, 0.0, acts)
+    return LayerCost(name, "pool", fwd, err, 0.0, acts, sf=sf)
 
 
 def fc_layer(name: str, si: int, so: int, sf: int = 4) -> LayerCost:
@@ -71,7 +72,7 @@ def fc_layer(name: str, si: int, so: int, sf: int = 4) -> LayerCost:
     bwd = 2 * si * so + si * so                                 # error + gradient
     weights = sf * si * so
     acts = sf * (so + si)
-    return LayerCost(name, "fc", fwd, bwd, 2 * weights, acts)
+    return LayerCost(name, "fc", fwd, bwd, 2 * weights, acts, sf=sf)
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +117,8 @@ def attention_layer(name: str, cfg: ArchConfig, seq: int, sf: int = 2) -> LayerC
     fwd = proj + scores
     weights = sf * (d * nh * hd + 2 * d * kv * hd + nh * hd * d)
     acts = sf * (4 * nh * hd + 2 * d)
-    return LayerCost(name, "attention", fwd, 2 * fwd, 2 * weights, acts)
+    return LayerCost(name, "attention", fwd, 2 * fwd, 2 * weights, acts,
+                     sf=sf)
 
 
 def ffn_layer(name: str, cfg: ArchConfig, sf: int = 2) -> LayerCost:
@@ -126,11 +128,12 @@ def ffn_layer(name: str, cfg: ArchConfig, sf: int = 2) -> LayerCost:
         fwd = 2 * d * e + k * 3 * 2 * d * f                    # router + top-k experts
         weights = sf * (d * e + e * 3 * d * f)                 # ALL experts resident
         acts = sf * (k * (2 * f + d))
-        return LayerCost(name, "moe_ffn", fwd, 2 * fwd, 2 * weights, acts)
+        return LayerCost(name, "moe_ffn", fwd, 2 * fwd, 2 * weights, acts,
+                         sf=sf)
     fwd = 3 * 2 * d * f
     weights = sf * 3 * d * f
     acts = sf * (2 * f + d)
-    return LayerCost(name, "ffn", fwd, 2 * fwd, 2 * weights, acts)
+    return LayerCost(name, "ffn", fwd, 2 * fwd, 2 * weights, acts, sf=sf)
 
 
 def ssm_layer(name: str, cfg: ArchConfig, sf: int = 2) -> LayerCost:
@@ -146,14 +149,14 @@ def ssm_layer(name: str, cfg: ArchConfig, sf: int = 2) -> LayerCost:
     weights = sf * (d * (2 * d_in + 2 * ds + n) + d_in * d
                     + s.d_conv * (d_in + 2 * ds))
     acts = sf * (4 * d_in + 4 * ds + 2 * n)
-    return LayerCost(name, "ssm", fwd, 2 * fwd, 2 * weights, acts)
+    return LayerCost(name, "ssm", fwd, 2 * fwd, 2 * weights, acts, sf=sf)
 
 
 def arch_layers(cfg: ArchConfig, seq: int, sf: int = 2) -> List[LayerCost]:
     """Per-layer cost vector for an assigned architecture (decoder stack)."""
     out: List[LayerCost] = []
     emb = LayerCost("embed", "embed", 2 * cfg.d_model, 2 * cfg.d_model,
-                    sf * cfg.vocab * cfg.d_model, sf * cfg.d_model)
+                    sf * cfg.vocab * cfg.d_model, sf * cfg.d_model, sf=sf)
     out.append(emb)
     for i in range(cfg.enc_layers):
         out.append(attention_layer(f"enc{i}.attn", cfg, seq, sf))
@@ -168,7 +171,7 @@ def arch_layers(cfg: ArchConfig, seq: int, sf: int = 2) -> List[LayerCost]:
     head_w = 0 if cfg.tie_embeddings else sf * cfg.d_model * cfg.vocab
     out.append(LayerCost("unembed", "fc", 2 * cfg.d_model * cfg.vocab,
                          4 * cfg.d_model * cfg.vocab, 2 * head_w,
-                         sf * cfg.vocab))
+                         sf * cfg.vocab, sf=sf))
     return out
 
 
@@ -190,6 +193,33 @@ def mem_vector(layers: Sequence[LayerCost], batch: int) -> np.ndarray:
 def model_size_bytes(layers: Sequence[LayerCost]) -> float:
     """gamma: DNN model size transmitted between tiers (weights only)."""
     return float(sum(l.mem_weights / 2 for l in layers))  # /2: exclude grad buffer
+
+
+def param_count(layers: Sequence[LayerCost]) -> float:
+    """Transmitted parameter count: the weight bytes of each layer divided
+    by its native precision ``sf`` (so mixed-precision stacks sum
+    correctly). Uses the same weights-only convention as
+    :func:`model_size_bytes`."""
+    return float(sum(l.mem_weights / 2 / l.sf for l in layers))
+
+
+def upload_bytes(layers: Sequence[LayerCost],
+                 bits_per_param: Optional[float] = None) -> float:
+    """gamma at a chosen upload compression level.
+
+    ``bits_per_param=None`` prices the upload at each layer's native
+    precision — exactly :func:`model_size_bytes`, the historical behavior.
+    Otherwise every transmitted parameter costs ``bits_per_param/8`` bytes
+    (e.g. 16 for a bf16 data plane, 8 for int8-quantized uploads), which
+    scales the DDSRA uplink/downlink delay and transmit-energy terms
+    linearly since they are all linear in gamma.
+    """
+    if bits_per_param is None:
+        return model_size_bytes(layers)
+    if bits_per_param <= 0:
+        raise ValueError(f"bits_per_param must be positive, "
+                         f"got {bits_per_param}")
+    return param_count(layers) * float(bits_per_param) / 8.0
 
 
 def train_time_split(flops: np.ndarray, l_split: int, k_iters: int, d_batch: int,

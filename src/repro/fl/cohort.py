@@ -104,7 +104,24 @@ def _maybe_flatten(plan: Plan, xs: Tuple[jax.Array, ...]):
     return xs
 
 
-def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr):
+# Scenario.dtype -> the dtype activations/weights are *computed and shipped*
+# in. Master parameters, optimizer math and the stats pass stay float32; the
+# control plane (DDSRA) stays x64 (see repro.core.ddsra).
+COMPUTE_DTYPES = {"f32": None, "bf16": jnp.bfloat16}
+
+
+def _cast_floats(tree, dtype):
+    """Cast floating leaves of a pytree (bf16 storage/HBM traffic; non-float
+    leaves untouched). ``dtype=None`` is the identity."""
+    if dtype is None:
+        return tree
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr,
+                 compute_dtype: str = "f32"):
     """K local SGD epochs for every slot: one ``vmap`` segment per tier
     inside one ``lax.scan`` over the epochs.
 
@@ -112,7 +129,15 @@ def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr):
     Returns (per-tier stacked final params, per-tier last-epoch losses) in
     the same tuple-of-tiers form, so callers control whether slots are
     concatenated locally (single host) or reduced via ``psum`` (sharded).
+
+    ``compute_dtype="bf16"`` runs the forward/backward GEMMs in bfloat16
+    (mixed precision): master params stay f32, the cast happens *inside* the
+    loss closure so ``value_and_grad`` differentiates through it and the
+    gradients come back f32 against the f32 masters; the Pallas kernels
+    accumulate in f32 VMEM scratch regardless of operand dtype, and the
+    logits are promoted to f32 before the cross-entropy reduction.
     """
+    cdt = COMPUTE_DTYPES[compute_dtype]
     stacked = tuple(
         jax.tree.map(lambda p: jnp.broadcast_to(p, (x.shape[0],) + p.shape),
                      params)
@@ -120,7 +145,9 @@ def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr):
 
     def dev_step(p, xb, yb, mb):
         def loss_of(pp):
-            return vgg.masked_xent_loss(vgg.forward(plan, pp, xb), yb, mb)
+            logits = vgg.forward(plan, _cast_floats(pp, cdt),
+                                 _cast_floats(xb, cdt))
+            return vgg.masked_xent_loss(logits.astype(jnp.float32), yb, mb)
         loss, g = jax.value_and_grad(loss_of)(p)
         new_p = jax.tree.map(lambda w_, g_: w_ - lr * g_, p, g)
         return new_p, loss
@@ -176,14 +203,16 @@ def _batch_tiers(batch):
 
 @functools.partial(jax.jit,
                    static_argnames=("plan", "k_iters", "with_boundary",
-                                    "with_gateway_models"))
+                                    "with_gateway_models", "compute_dtype"))
 def _cohort_round(plan: Plan, params: Params, xs, ys, masks, l_n, weights,
                   gw_onehot, lr, *, k_iters: int, with_boundary: bool,
-                  with_gateway_models: bool = False):
+                  with_gateway_models: bool = False,
+                  compute_dtype: str = "f32"):
     TRACE_COUNTS["round"] += 1
     xs = _maybe_flatten(plan, xs)
     sizes = tuple(x.shape[0] for x in xs)
-    final_t, loss_t = _local_train(plan, params, xs, ys, masks, k_iters, lr)
+    final_t, loss_t = _local_train(plan, params, xs, ys, masks, k_iters, lr,
+                                   compute_dtype)
     final = _concat_tiers(final_t)
     dev_losses = jnp.concatenate(loss_t)
 
@@ -217,7 +246,8 @@ def _cohort_round(plan: Plan, params: Params, xs, ys, masks, l_n, weights,
 
 def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
                  k_iters: int, lr, with_boundary: bool = True,
-                 with_gateway_models: bool = False) -> Tuple:
+                 with_gateway_models: bool = False,
+                 compute_dtype: str = "f32") -> Tuple:
     """Run one fused FL round for the whole cohort.
 
     batch: ``repro.fl.data.CohortBatch`` (single padded width) or
@@ -234,6 +264,9 @@ def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
     with_gateway_models: additionally return the per-gateway shop-floor
     FedAvg models (leading gateway axis), before the global mix — the
     intermediate the Fig. 2 divergence experiment measures.
+    compute_dtype: "f32" (default) or "bf16" — the mixed-precision data
+    plane (see ``_local_train``); master params and every returned tensor
+    stay f32 either way.
 
     Returns (new_global_params, per_gateway_loss (M,), per_gateway_count (M,),
     per_slot_loss (S,), boundary_rms (S,)), plus the gateway models as a
@@ -246,7 +279,8 @@ def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
                         jnp.asarray(gw_onehot, jnp.float32),
                         jnp.float32(lr), k_iters=k_iters,
                         with_boundary=with_boundary,
-                        with_gateway_models=with_gateway_models)
+                        with_gateway_models=with_gateway_models,
+                        compute_dtype=compute_dtype)
     return out if with_gateway_models else out[:5]
 
 

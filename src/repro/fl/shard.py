@@ -56,15 +56,18 @@ def _psum(v):
 
 @functools.lru_cache(maxsize=None)
 def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
-                   with_boundary: bool, with_gateway_models: bool):
+                   with_boundary: bool, with_gateway_models: bool,
+                   compute_dtype: str = "f32"):
     """Compile-once sharded round: slots tiled over the mesh, params
-    replicated, FedAvg as masked psums inside the mapped body."""
+    replicated, FedAvg as masked psums inside the mapped body.
+    ``compute_dtype`` selects the mixed-precision data plane (part of the
+    lru_cache key, so f32 and bf16 rounds compile separate programs)."""
 
     def body(params, xs, ys, masks, ls, ws, gws, lr):
         TRACE_COUNTS["round"] += 1
         xs = cohort_lib._maybe_flatten(plan, xs)
         final_t, loss_t = cohort_lib._local_train(
-            plan, params, xs, ys, masks, k_iters, lr)
+            plan, params, xs, ys, masks, k_iters, lr, compute_dtype)
         final = cohort_lib._concat_tiers(final_t)       # local slots only
         w = jnp.concatenate(ws)
         losses = jnp.concatenate(loss_t)
@@ -148,7 +151,8 @@ def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:
 def sharded_cohort_round(mesh, plan: Plan, params: Params, batch, l_slot,
                          w_slot, gw_onehot, k_iters: int, lr,
                          with_boundary: bool = True,
-                         with_gateway_models: bool = False) -> Tuple:
+                         with_gateway_models: bool = False,
+                         compute_dtype: str = "f32") -> Tuple:
     """Run one fused FL round sharded over ``mesh``'s ``"cohort"`` axis.
 
     Same contract and return convention as
@@ -180,7 +184,7 @@ def sharded_cohort_round(mesh, plan: Plan, params: Params, batch, l_slot,
     gw_t = pad_all(gw_t, np.float32)
 
     fn = _round_program(mesh, plan, k_iters, len(sizes),
-                        with_boundary, with_gateway_models)
+                        with_boundary, with_gateway_models, compute_dtype)
     new_global, gw_loss, gw_count, loss_t, boundary_t, gw_models = fn(
         params, xs, ys, masks, l_t, w_t, gw_t, jnp.float32(lr))
 
@@ -242,7 +246,8 @@ class ShardedCohortEngine(sim_lib.CohortEngine):
         out = sharded_cohort_round(
             self._mesh(sim), sim.plan, params, batch, l_slot, w_slot,
             gw_slot, sc.k_iters, sc.lr, with_boundary=with_boundary,
-            with_gateway_models=with_gateway_models)
+            with_gateway_models=with_gateway_models,
+            compute_dtype=sc.dtype)
         return out if with_gateway_models else (*out, None)
 
     def _fused_stats(self, sim: "sim_lib.Simulation", params, batch, mix):

@@ -94,7 +94,24 @@ class Scenario:
     tiers: Union[int, str] = 1
     mesh_shape: Optional[Tuple[int, ...]] = None   # cohort mesh (None = all)
     keep_last: Optional[int] = None    # checkpoint rotation (None = keep all)
+    # mixed-precision data plane: "f32" (default) or "bf16" (bf16 storage/
+    # GEMMs with f32 master params + f32 accumulation; cohort engines only)
+    dtype: str = "f32"
+    # model-upload compression: bits per parameter priced into the DDSRA
+    # upload-delay/energy terms (None = the model's native precision;
+    # dtype="bf16" implies 16 unless overridden — e.g. 8 for int8 uploads)
+    upload_bits: Optional[float] = None
     net: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)
+
+    @property
+    def effective_upload_bits(self) -> Optional[float]:
+        """Bits per parameter the cost model prices the model upload at:
+        ``upload_bits`` when set, else 16 for the bf16 data plane, else
+        ``None`` — the model's native precision
+        (``costmodel.upload_bytes(layers, None)`` = ``model_size_bytes``)."""
+        if self.upload_bits is not None:
+            return float(self.upload_bits)
+        return 16.0 if self.dtype == "bf16" else None
 
     def to_json(self) -> dict:
         """Serialize to a plain-JSON dict (tuples become lists)."""
@@ -182,6 +199,10 @@ def make_engine(name: str) -> "Engine":
 class Engine:
     """Protocol: how a scheduled round is executed on the model."""
     name: str
+    # compute dtypes this engine can run the data plane in; Simulation
+    # rejects a Scenario whose ``dtype`` the chosen engine can't honor
+    # (silently training in f32 would falsify the priced upload_bits).
+    supported_dtypes: Tuple[str, ...] = ("f32",)
 
     def estimate_stats(self, sim: "Simulation", params) -> DataStats:
         """Estimate the per-device sigma_n/delta_n/L_n statistics the
@@ -206,6 +227,8 @@ class CohortEngine(Engine):
     contract), so every round reuses one compiled executable regardless of
     which devices the policy schedules.
     """
+
+    supported_dtypes = ("f32", "bf16")
 
     def _shard_count(self, sim: "Simulation") -> int:
         """Multiple each tier's slot count must divide into (the cohort
@@ -233,7 +256,8 @@ class CohortEngine(Engine):
         out = cohort_lib.cohort_round(
             sim.plan, params, batch, l_slot, w_slot, gw_slot,
             sc.k_iters, sc.lr, with_boundary=with_boundary,
-            with_gateway_models=with_gateway_models)
+            with_gateway_models=with_gateway_models,
+            compute_dtype=sc.dtype)
         return out if with_gateway_models else (*out, None)
 
     def _fused_stats(self, sim: "Simulation", params, batch, mix):
@@ -403,6 +427,14 @@ class Simulation:
                  _stats: Optional[DataStats] = None):
         self.scenario = sc = scenario
         self.engine: Engine = make_engine(sc.engine)
+        if sc.dtype not in cohort_lib.COMPUTE_DTYPES:
+            raise ValueError(
+                f"Scenario.dtype={sc.dtype!r}: expected one of "
+                f"{sorted(cohort_lib.COMPUTE_DTYPES)}")
+        if sc.dtype not in self.engine.supported_dtypes:
+            raise ValueError(
+                f"engine {sc.engine!r} supports dtypes "
+                f"{self.engine.supported_dtypes}, not {sc.dtype!r}")
         self.net = Network(sc.net, np.random.default_rng(sc.seed))
         self.rng = np.random.default_rng(sc.seed + 1)
         ncfg = self.net.cfg
@@ -431,8 +463,12 @@ class Simulation:
 
         o = cm.flops_vector(self.layers)
         g = cm.mem_vector(self.layers, batch=int(self.d_tilde.max()))
-        self.workload = Workload(o, g, cm.model_size_bytes(self.layers),
-                                 sc.k_iters, self.d_tilde.astype(float))
+        # the model upload is priced at the scenario's compression level:
+        # Workload.gamma feeds every uplink/downlink delay and energy term in
+        # the DDSRA solvers, so quantized uploads shift the whole schedule.
+        self.workload = Workload(
+            o, g, cm.upload_bytes(self.layers, sc.effective_upload_bits),
+            sc.k_iters, self.d_tilde.astype(float))
 
         self.gateways = [
             Gateway(m, [Device(int(n), m, int(self.d_sizes[n]),

@@ -18,6 +18,16 @@ shared ``kernel.tile_plan`` gates pallas-vs-ref routing for forward and
 both backward contractions. Set ``REPRO_FUSED_LINEAR_IMPL=interpret`` to
 execute the kernel bodies on CPU (CI does, for tests/test_kernels.py).
 
+``autotune`` is the cross-cutting module: a block-shape autotuner and a
+persistent per-op selection table (``artifacts/autotune/*.json``, keyed
+``op|shape|dtype|backend``) that every ops layer consults through
+``autotune.blocks_for`` — exact autotuned match when one exists, the
+clamped-128 heuristic otherwise; cold keys never sweep. Regenerate with
+``benchmarks/kernel_bench.py --autotune``; validate with
+``python -m repro.kernels.autotune --check``. The kernels run f32 VMEM
+accumulation for every operand dtype, which is what makes the bf16
+mixed-precision data plane (``Scenario.dtype="bf16"``) safe.
+
 Add new subpackages only for compute the paper itself optimizes with a
 custom kernel.
 """

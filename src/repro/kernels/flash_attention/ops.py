@@ -7,6 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -15,13 +16,18 @@ from repro.kernels.flash_attention.ref import attention_ref
                                              "block_k", "interpret", "use_pallas"))
 def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                   *, causal: bool = True, window: Optional[int] = None,
-                  block_q: int = 128, block_k: int = 128,
+                  block_q: Optional[int] = None,
+                  block_k: Optional[int] = None,
                   interpret: bool = False, use_pallas: bool = True) -> jax.Array:
     """Layout adapter: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd).
 
     Repeats KV heads to match the query heads (grouped-query attention),
     transposes to the kernel's (B,H,S,D) layout and dispatches to the Pallas
-    kernel (or the jnp oracle when ``use_pallas=False``).
+    kernel (or the jnp oracle when ``use_pallas=False``). Block sizes
+    default to the kernel-selection table
+    (``repro.kernels.autotune.blocks_for`` on the (B,H,S,D) kernel-layout
+    shape; clamped-128 heuristic on a table miss) — pass ``block_q``/
+    ``block_k`` explicitly to override.
     """
     b, s, h, hd = q.shape
     kvh = k.shape[2]
@@ -32,6 +38,11 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     fn = flash_attention if use_pallas else attention_ref
     kw = dict(causal=causal, window=window)
     if use_pallas:
+        if block_q is None or block_k is None:
+            tq, tk = autotune.blocks_for("flash_attention", (b, h, s, hd),
+                                         str(q.dtype), interpret=interpret)
+            block_q = tq if block_q is None else block_q
+            block_k = tk if block_k is None else block_k
         kw.update(block_q=block_q, block_k=block_k, interpret=interpret)
     out = fn(qt, kt, vt, **kw)
     return out.transpose(0, 2, 1, 3)

@@ -20,6 +20,12 @@ backward kernels index their transposed operand through the BlockSpec map
 and never materialize ``w.T``/``x.T`` (nor does the ref path — see
 ``ref.py``). ``REPRO_FUSED_LINEAR_IMPL`` overrides the default impl
 (e.g. ``interpret`` on CPU CI so kernel bodies actually execute).
+
+Block sizes come from the kernel-selection table
+(``repro.kernels.autotune.blocks_for``): an autotuned exact match per
+(shape, dtype, backend) when one exists, the clamped-128 heuristic
+otherwise. The forward GEMM's (M, K, N) triple keys the lookup for all
+three contractions, so the whole VJP tiles from one table entry.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ import os
 
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.fused_linear.kernel import (TilePlan, fused_linear,
                                                fused_linear_bwd_dw_db,
                                                fused_linear_bwd_dx, tile_plan)
@@ -35,7 +42,6 @@ from repro.kernels.fused_linear.ref import (ACTS, fused_linear_bwd_dw_db_ref,
                                             fused_linear_bwd_dx_ref,
                                             fused_linear_ref)
 
-_BLOCKS = (128, 128, 128)                      # (block_m, block_n, block_k)
 _IMPLS = ("pallas", "interpret", "ref")
 
 
@@ -49,8 +55,12 @@ def _impl_default() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def _plan(m: int, k: int, n: int) -> TilePlan:
-    bm, bn, bk = _BLOCKS
+def _plan(m: int, k: int, n: int, dtype, impl: str) -> TilePlan:
+    """Tile plan from the selection table (exact autotuned match or the
+    clamped-128 heuristic), validated by ``tile_plan``'s alignment rule —
+    the single source of block choices for the whole VJP."""
+    bm, bk, bn = autotune.blocks_for("fused_linear", (m, k, n), str(dtype),
+                                     interpret=impl == "interpret")
     return tile_plan(m, k, n, block_m=bm, block_n=bn, block_k=bk)
 
 
@@ -63,7 +73,7 @@ def _matmul_act(x, w, b, activation: str, impl: str):
     """One fused forward GEMM via the chosen implementation."""
     m, k = x.shape
     n = w.shape[1]
-    plan = _plan(m, k, n)
+    plan = _plan(m, k, n, x.dtype, impl)
     if impl != "ref" and plan.aligned:
         return fused_linear(x, w, b, activation=activation,
                             **_kern_kwargs(plan, impl))
@@ -72,7 +82,7 @@ def _matmul_act(x, w, b, activation: str, impl: str):
 
 def _bwd_dx(dy, w, y, mask: str, impl: str):
     m, n = dy.shape
-    plan = _plan(m, w.shape[0], n)
+    plan = _plan(m, w.shape[0], n, dy.dtype, impl)
     if impl != "ref" and plan.aligned:
         return fused_linear_bwd_dx(dy, w, y, mask=mask,
                                    **_kern_kwargs(plan, impl))
@@ -81,7 +91,7 @@ def _bwd_dx(dy, w, y, mask: str, impl: str):
 
 def _bwd_dw_db(x, dy, y, mask: str, impl: str):
     m, n = dy.shape
-    plan = _plan(m, x.shape[1], n)
+    plan = _plan(m, x.shape[1], n, dy.dtype, impl)
     if impl != "ref" and plan.aligned:
         return fused_linear_bwd_dw_db(x, dy, y, mask=mask,
                                       **_kern_kwargs(plan, impl))

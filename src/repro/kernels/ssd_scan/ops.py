@@ -2,18 +2,32 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels import autotune
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_h", "interpret",
                                              "use_pallas"))
-def ssd(xh, dt, a_log, b_ssm, c_ssm, *, chunk: int = 128, block_h: int = 8,
-        interpret: bool = False, use_pallas: bool = True):
-    if use_pallas:
-        return ssd_scan(xh, dt, a_log, b_ssm, c_ssm, chunk=chunk,
-                        block_h=block_h, interpret=interpret)
-    return ssd_ref(xh, dt, a_log, b_ssm, c_ssm)
+def ssd(xh, dt, a_log, b_ssm, c_ssm, *, chunk: Optional[int] = None,
+        block_h: Optional[int] = None, interpret: bool = False,
+        use_pallas: bool = True):
+    """Chunked SSD scan; ``chunk``/``block_h`` default to the
+    kernel-selection table (``repro.kernels.autotune.blocks_for`` on the
+    (B, S, n, p, ds) shape; clamped heuristic on a miss) — pass them
+    explicitly to override."""
+    if not use_pallas:
+        return ssd_ref(xh, dt, a_log, b_ssm, c_ssm)
+    if chunk is None or block_h is None:
+        bsz, s, n, p = xh.shape
+        tc, th = autotune.blocks_for("ssd_scan", (bsz, s, n, p,
+                                                  b_ssm.shape[-1]),
+                                     str(xh.dtype), interpret=interpret)
+        chunk = tc if chunk is None else chunk
+        block_h = th if block_h is None else block_h
+    return ssd_scan(xh, dt, a_log, b_ssm, c_ssm, chunk=chunk,
+                    block_h=block_h, interpret=interpret)

@@ -323,3 +323,71 @@ def test_routing_boundary_off_tile_shapes(m, k, n, act):
     want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
     for g, r, name in zip(got, want, ("dx", "dw", "db")):
         np.testing.assert_allclose(g, r, atol=1e-4, rtol=1e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "silu", "gelu"])
+@pytest.mark.parametrize("m,k,n", [(127, 128, 129), (129, 127, 128),
+                                   (128, 256, 128)])
+def test_routing_boundary_off_tile_bf16(m, k, n, act):
+    """bf16 mixed-precision parity on the exact shapes straddling the
+    128-tile routing boundary: forward and all three backward contractions
+    of the bf16 path (f32 VMEM accumulation) match the f32 reference at
+    bf16 storage tolerances, on both sides of the pallas↔ref boundary."""
+    keys = jax.random.split(jax.random.PRNGKey(m * 211 + k * 31 + n), 3)
+    x16 = _rand(keys[0], (m, k), jnp.bfloat16)
+    w16 = (_rand(keys[1], (k, n), jnp.float32) / np.sqrt(k)
+           ).astype(jnp.bfloat16)
+    b16 = _rand(keys[2], (n,), jnp.bfloat16)
+    x32, w32, b32 = (a.astype(jnp.float32) for a in (x16, w16, b16))
+
+    def loss_kernel(x, w, b):
+        return fused_ops.linear(x, w, b, activation=act,
+                                impl="interpret").astype(jnp.float32).sum()
+
+    def loss_ref(x, w, b):
+        return fused_linear_ref(x, w, b, act).sum()
+
+    tol = TOL[jnp.bfloat16]
+    np.testing.assert_allclose(
+        np.asarray(fused_ops.linear(x16, w16, b16, activation=act,
+                                    impl="interpret"), jnp.float32),
+        fused_linear_ref(x32, w32, b32, act), atol=tol, rtol=tol)
+    got = jax.grad(loss_kernel, argnums=(0, 1, 2))(x16, w16, b16)
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(x32, w32, b32)
+    for g, r, name in zip(got, want, ("dx", "dw", "db")):
+        assert g.dtype == jnp.bfloat16    # cotangents match operand storage
+        g, r = np.asarray(g, jnp.float32), np.asarray(r)
+        scale = max(1.0, float(np.max(np.abs(r))))
+        np.testing.assert_allclose(g, r, atol=tol * scale, rtol=tol,
+                                   err_msg=name)
+
+
+def test_linear_bf16_e2e_no_transpose_pinned():
+    """Pinned acceptance test for the mixed-precision data plane: the bf16
+    fused_linear fwd+bwd passes parity vs the f32 reference at bf16
+    tolerances AND its whole training-step jaxpr carries zero transpose
+    primitives (operand transposition lives in BlockSpec index maps /
+    dot_general dimension numbers only)."""
+    m, k, n = 128, 256, 128
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = _rand(keys[0], (m, k), jnp.bfloat16)
+    w = (_rand(keys[1], (k, n), jnp.float32) / np.sqrt(k)
+         ).astype(jnp.bfloat16)
+    b = _rand(keys[2], (n,), jnp.bfloat16)
+
+    def loss(x, w, b):
+        return fused_ops.linear(x, w, b, activation="relu",
+                                impl="interpret").astype(jnp.float32).sum()
+
+    jaxpr = str(jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(x, w, b))
+    assert "transpose" not in jaxpr
+
+    got = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(
+        lambda x_, w_, b_: fused_linear_ref(x_, w_, b_, "relu").sum(),
+        argnums=(0, 1, 2))(*(a.astype(jnp.float32) for a in (x, w, b)))
+    for g, r, name in zip(got, want, ("dx", "dw", "db")):
+        g, r = np.asarray(g, jnp.float32), np.asarray(r)
+        scale = max(1.0, float(np.max(np.abs(r))))
+        np.testing.assert_allclose(g, r, atol=2e-2 * scale, rtol=2e-2,
+                                   err_msg=name)

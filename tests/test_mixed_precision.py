@@ -1,0 +1,145 @@
+"""Mixed-precision data plane + quantized-upload cost axis.
+
+Covers the two Scenario knobs PR 6 added: ``dtype="bf16"`` (bf16 storage /
+f32-accumulation training through the cohort engines, f32 master params)
+and ``upload_bits`` (bits-per-parameter compression priced into the DDSRA
+upload-delay and energy terms through ``Workload.gamma``).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.network import Network, NetworkConfig
+from repro.fl import cohort as cohort_lib
+from repro.fl.sim import Scenario, Simulation
+
+NET = NetworkConfig(n_devices=6, n_gateways=2, n_channels=2)
+
+
+def _scenario(**kw):
+    kw.setdefault("model", "mlp")
+    kw.setdefault("rounds", 2)
+    kw.setdefault("net", NET)
+    return Scenario(**kw)
+
+
+# ---------------------------------------------------------------------------
+# costmodel: the bits-per-parameter axis
+# ---------------------------------------------------------------------------
+
+
+def test_upload_bytes_scales_linearly_with_bits():
+    layers = cm.vgg11_layers(width_mult=0.25)
+    native = cm.model_size_bytes(layers)
+    # None = native precision = the historical gamma, exactly
+    assert cm.upload_bytes(layers, None) == native
+    # vgg layers are sf=4 (32-bit): pricing at 32 bits reproduces native
+    assert cm.upload_bytes(layers, 32) == pytest.approx(native)
+    # and the axis is linear in bits
+    assert cm.upload_bytes(layers, 16) == pytest.approx(native / 2)
+    assert cm.upload_bytes(layers, 8) == pytest.approx(native / 4)
+    assert cm.param_count(layers) == pytest.approx(native / 4)  # 4 B/param
+    with pytest.raises(ValueError):
+        cm.upload_bytes(layers, 0)
+
+
+def test_upload_delay_and_energy_scale_with_bits():
+    """Regression: the DDSRA uplink/downlink delay and transmit-energy
+    terms scale linearly with the bits-per-parameter knob (they are linear
+    in gamma)."""
+    layers = cm.vgg11_layers(width_mult=0.25)
+    net = Network(NET, np.random.default_rng(0))
+    st = net.draw()
+    p = NET.p_max / 2
+    g32 = cm.upload_bytes(layers, 32)
+    g8 = cm.upload_bytes(layers, 8)
+    for fn in (lambda g: net.uplink_time(0, 0, p, g, st),
+               lambda g: net.downlink_time(0, 0, g, st),
+               lambda g: net.uplink_energy(0, 0, p, g, st)):
+        assert fn(g8) == pytest.approx(fn(g32) / 4)
+        assert fn(g8) > 0
+
+
+def test_simulation_prices_upload_bits_into_workload():
+    base = Simulation(_scenario())
+    g_native = cm.model_size_bytes(base.layers)
+    assert base.workload.gamma == g_native                    # seed parity
+    assert Simulation(_scenario(upload_bits=8)).workload.gamma == \
+        pytest.approx(g_native / 4)
+    # dtype="bf16" implies 16-bit uploads unless overridden
+    assert Simulation(_scenario(dtype="bf16")).workload.gamma == \
+        pytest.approx(g_native / 2)
+    assert Simulation(_scenario(dtype="bf16", upload_bits=8)).workload.gamma \
+        == pytest.approx(g_native / 4)
+
+
+# ---------------------------------------------------------------------------
+# Scenario knobs
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_round_trips_new_fields():
+    sc = _scenario(dtype="bf16", upload_bits=8.0)
+    assert Scenario.from_json(json.loads(json.dumps(sc.to_json()))) == sc
+    # old checkpoints (no dtype/upload_bits keys) load with defaults
+    d = _scenario().to_json()
+    del d["dtype"], d["upload_bits"]
+    old = Scenario.from_json(d)
+    assert old.dtype == "f32" and old.upload_bits is None
+    assert old.effective_upload_bits is None
+
+
+def test_bad_dtype_and_unsupported_engine_raise():
+    with pytest.raises(ValueError, match="dtype"):
+        Simulation(_scenario(dtype="fp8"))
+    with pytest.raises(ValueError, match="sequential"):
+        Simulation(_scenario(dtype="bf16", engine="sequential"))
+
+
+# ---------------------------------------------------------------------------
+# bf16 training path
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_round_keeps_f32_masters_and_trains():
+    """A bf16 cohort round runs end to end: master params stay f32, the
+    loss moves, and the result tracks the f32 round within bf16 noise."""
+    sim32 = Simulation(_scenario(seed=3))
+    sim16 = Simulation(_scenario(seed=3, dtype="bf16"))
+    r32 = next(sim32.rounds())
+    r16 = next(sim16.rounds())
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree.leaves(sim16.params))
+    # same devices trained on the same draws; losses agree to bf16 tolerance
+    assert r16.trained == r32.trained
+    np.testing.assert_allclose(r16.losses, r32.losses, rtol=5e-2, atol=5e-2)
+    # and the bf16 params track the f32 params at bf16 resolution
+    for a, b in zip(jax.tree.leaves(sim16.params),
+                    jax.tree.leaves(sim32.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-2, rtol=3e-2)
+
+
+def test_local_train_bf16_gemms_run_in_bf16():
+    """The bf16 data plane really computes in bf16: the traced jaxpr of a
+    bf16 local-train step contains bf16 dot/conv operands (storage + HBM
+    traffic), while the f32 plan contains none."""
+    key = jax.random.PRNGKey(0)
+    from repro.models import vgg
+    plan, params = vgg.init_mlp(key, sizes=(16, 8, 4))
+    xs = (jax.random.normal(key, (2, 4, 16)),)
+    ys = (jnp.zeros((2, 4), jnp.int32),)
+    masks = (jnp.ones((2, 4)),)
+
+    def trace(dtype):
+        return str(jax.make_jaxpr(
+            lambda p: cohort_lib._local_train(plan, p, xs, ys, masks, 1,
+                                              0.01, compute_dtype=dtype))(
+            params))
+
+    assert "bf16" in trace("bf16")
+    assert "bf16" not in trace("f32")
