@@ -23,6 +23,8 @@ BENCHES = [
      "block-shape sweeps -> artifacts/autotune selection tables"),
     ("fl_round_bench", "fl_round_bench", {},
      "Cohort engine vs sequential FL round (speedup)"),
+    ("fl_round_bench --churn", "fl_round_bench", {"churn_sweep": True},
+     "churn/straggler sweep: sync barrier vs buffered async delay"),
     ("scheduler_bench", "scheduler_bench", {},
      "DDSRA decide latency: numpy oracle vs jitted control plane"),
     ("theorem2_tradeoff", "theorem2_tradeoff", {},

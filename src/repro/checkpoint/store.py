@@ -7,6 +7,7 @@ views since numpy lacks bfloat16).
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import re
 from typing import Any, Optional
@@ -34,8 +35,20 @@ def _paths_and_leaves(tree):
     return out
 
 
+def atomic_write_bytes(fname: pathlib.Path, write_fn) -> None:
+    """Write a file atomically: ``write_fn(file_object)`` fills a ``.tmp``
+    sibling which is then ``os.replace``-d over ``fname``. Readers (e.g.
+    ``Simulation.resume`` racing a background checkpoint writer) therefore
+    only ever see absent or *complete* files, never partial ones."""
+    tmp = fname.with_name(fname.name + ".tmp")
+    with open(tmp, "wb") as f:
+        write_fn(f)
+    os.replace(tmp, fname)
+
+
 def save_pytree(path, tree, step: Optional[int] = None,
-                keep_last: Optional[int] = None) -> pathlib.Path:
+                keep_last: Optional[int] = None,
+                prefix: str = "step") -> pathlib.Path:
     """Write ``tree`` under ``path``; with ``step``, as ``step_NNNNNNNN.npz``.
 
     ``keep_last`` rotates stepped checkpoints: after a successful write,
@@ -44,12 +57,20 @@ def save_pytree(path, tree, step: Optional[int] = None,
     checkpoint directory without bound. The step just written is never
     deleted, even if the directory holds stale higher-numbered steps from
     an earlier, longer run.
+
+    ``prefix`` names the file family (default ``"step"``); side-car trees
+    such as the async engine's staleness buffer use their own prefix (e.g.
+    ``engine_NNNNNNNN.npz``) so they never collide with the model params.
+    Rotation (``keep_last``/:func:`gc_steps`) only tracks the ``step``
+    family; callers of other prefixes GC their own files. Both the ``.npz``
+    and its dtype manifest are written atomically (tmp + rename).
     """
     if keep_last is not None and keep_last < 1:
         raise ValueError(f"keep_last must be >= 1, got {keep_last}")
     path = pathlib.Path(path)
     path.mkdir(parents=True, exist_ok=True)
-    fname = path / (f"step_{step:08d}.npz" if step is not None else "ckpt.npz")
+    fname = path / (f"{prefix}_{step:08d}.npz" if step is not None
+                    else "ckpt.npz")
     arrays = {}
     meta = {}
     for key, leaf in _paths_and_leaves(tree):
@@ -60,9 +81,10 @@ def save_pytree(path, tree, step: Optional[int] = None,
             meta[key] = "bfloat16"
             arr = arr.view(np.uint16)
         arrays[key] = arr
-    np.savez(fname, **arrays)
-    (fname.with_suffix(".json")).write_text(json.dumps(meta))
-    if step is not None and keep_last is not None:
+    atomic_write_bytes(fname, lambda f: np.savez(f, **arrays))
+    atomic_write_bytes(fname.with_suffix(".json"),
+                       lambda f: f.write(json.dumps(meta).encode()))
+    if step is not None and keep_last is not None and prefix == "step":
         gc_steps(path, keep_last, protect=step)
     return fname
 

@@ -21,6 +21,25 @@ def update_queues_jax(q, selected, gamma):
     return jnp.maximum(q - selected.astype(q.dtype) + gamma, 0.0)
 
 
+def update_queues_realized(q: np.ndarray, realized: np.ndarray,
+                           gamma: np.ndarray) -> np.ndarray:
+    """Eq. (14) driven by *realized* (not scheduled) participation.
+
+    Under asynchronous execution the scheduled indicator ``1_m^t`` and what
+    actually happened diverge: a selected gateway whose update churned or
+    was lost mid-round earned no queue relief, and a straggler's late
+    update earns its relief in the round it actually *lands* at the server
+    (which may be rounds after it was scheduled, and in a round where the
+    gateway was not selected at all). Feeding this realized indicator into
+    the queue recursion is how DDSRA reacts to churn: an unreliable
+    gateway's virtual queue keeps growing past its scheduled credit, so the
+    drift term re-prioritizes it. The arithmetic is identical to
+    :func:`update_queues` — the contract here is *which* indicator feeds
+    it (``repro.fl.async_engine`` supplies it per round).
+    """
+    return update_queues(q, np.asarray(realized, dtype=float), gamma)
+
+
 def drift_plus_penalty(v: float, tau: float, q: np.ndarray,
                        selected: np.ndarray) -> float:
     """Objective of P2 (Eq. 17): V*tau - sum_m Q_m * 1_m."""

@@ -30,6 +30,13 @@ class RoundContext:
     gamma_rates: np.ndarray        # participation-rate targets
     v: float
     losses: Optional[np.ndarray] = None   # (M,) last local losses
+    # (M,) updates dispatched but not yet landed at the server, per gateway —
+    # populated by the buffered async engine (None under synchronous
+    # engines). Policies may use it to avoid double-dispatching a gateway
+    # whose update is still in flight; the DDSRA family instead reacts to
+    # churn through the queues, which the async round updates with
+    # *realized* participation (lyapunov.update_queues_realized).
+    inflight: Optional[np.ndarray] = None
 
 
 def _fixed_resource_solution(ctx: RoundContext, m: int, j: int,

@@ -7,7 +7,12 @@ Public surface (see ``README.md`` in this directory and
   (``repro.fl.sim``).
 * Engines — ``CohortEngine`` (one fused XLA program per round),
   ``ShardedCohortEngine`` (the same round ``shard_map``-ed over a
-  ``"cohort"`` device mesh), ``SequentialEngine`` (seed per-device loop).
+  ``"cohort"`` device mesh), ``AsyncCohortEngine`` (churn-aware buffered
+  asynchronous aggregation over the fused round, ``repro.fl.async_engine``),
+  ``SequentialEngine`` (seed per-device loop).
+* Fault axes — ``FaultModel`` / ``draw_round_faults`` (``repro.fl.faults``):
+  churn, mid-round dropout and straggler tails drawn from the network RNG
+  stream, honored by the async engine.
 * Packing contract — ``sample_cohort_batch`` + ``CohortLayout`` /
   ``TieredCohortBatch`` (tiered slot widths) in ``repro.fl.data``.
 * ``FLTrainer`` / ``FLConfig`` — deprecated shim over ``Simulation``.
@@ -15,9 +20,11 @@ Public surface (see ``README.md`` in this directory and
 from repro.fl.data import (CohortBatch, CohortLayout, FLDataset,
                            TieredCohortBatch, make_fl_dataset, sample_batch,
                            sample_cohort_batch)
+from repro.fl.faults import FaultModel, RoundFaults, draw_round_faults
 from repro.fl.sim import (ENGINES, CohortEngine, Engine, FLResult,
                           RoundRecord, Scenario, SequentialEngine, Simulation,
                           make_engine, register_engine)
+from repro.fl.async_engine import AsyncCohortEngine
 from repro.fl.shard import ShardedCohortEngine
 from repro.fl.trainer import FLConfig, FLTrainer
 
@@ -25,5 +32,6 @@ __all__ = ["CohortBatch", "CohortLayout", "TieredCohortBatch", "FLDataset",
            "make_fl_dataset", "sample_batch", "sample_cohort_batch",
            "FLConfig", "FLResult", "FLTrainer", "Scenario", "Simulation",
            "RoundRecord", "Engine", "CohortEngine", "SequentialEngine",
-           "ShardedCohortEngine", "ENGINES", "make_engine",
+           "ShardedCohortEngine", "AsyncCohortEngine", "FaultModel",
+           "RoundFaults", "draw_round_faults", "ENGINES", "make_engine",
            "register_engine"]

@@ -48,6 +48,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fl.data import TieredCohortBatch
 from repro.fl.split import flat_params as _flat
@@ -282,6 +283,26 @@ def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
                         with_gateway_models=with_gateway_models,
                         compute_dtype=compute_dtype)
     return out if with_gateway_models else out[:5]
+
+
+def buffer_fedavg(models, weights):
+    """Weighted FedAvg over a list of buffered model pytrees.
+
+    The aggregation primitive of the buffered async engine
+    (``repro.fl.async_engine``): ``models`` is a list of same-structure
+    parameter pytrees (e.g. per-gateway shop-floor models pulled from the
+    staleness buffer) and ``weights`` their aggregation coefficients —
+    typically surviving-sample counts already discounted by staleness.
+    Weights are normalized here, so callers pass raw coefficients. Uses the
+    same stacked-tensordot idiom as the fused round's in-program FedAvg:
+    with every entry at staleness 0 and the full cohort buffered, this
+    reproduces ``_cohort_round``'s two-tier average (the degenerate-parity
+    oracle relies on that).
+    """
+    w = jnp.asarray(np.asarray(weights), jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    return jax.tree.map(
+        lambda *leaves: jnp.tensordot(w, jnp.stack(leaves), axes=1), *models)
 
 
 # ---------------------------------------------------------------------------

@@ -215,6 +215,32 @@ class TieredCohortBatch:
     layout: CohortLayout
 
 
+def zero_slot_rows(batch: "TieredCohortBatch", slots) -> "TieredCohortBatch":
+    """Return a copy of ``batch`` with the given tier-major slots zeroed.
+
+    The per-row validity mask doubles as a **completion mask**: a slot whose
+    mask is all-zero contributes an exact-zero loss and exact-zero gradients
+    to the fused round (``masked_xent_loss`` sums over valid rows only), so
+    zeroing a slot models a device that never executed its dispatch — e.g.
+    one that churned offline — without changing any array shape. The fused
+    program still runs the slot (shapes are the compile contract), but its
+    parameters stay at the broadcast global model and its zero FedAvg weight
+    keeps it out of every aggregate. ``batch`` is not mutated; with no
+    ``slots`` it is returned as-is.
+    """
+    slots = list(slots)
+    if not slots:
+        return batch
+    tiers = [CohortBatch(t.x.copy(), t.y.copy(), t.mask.copy())
+             for t in batch.tiers]
+    for s in slots:
+        k, row = batch.layout.locate(int(s))
+        tiers[k].x[row] = 0.0
+        tiers[k].y[row] = 0
+        tiers[k].mask[row] = 0.0
+    return TieredCohortBatch(tuple(tiers), batch.slot_of, batch.layout)
+
+
 def sample_cohort_batch(rng: np.random.Generator, ds: FLDataset,
                         device_ids, batch_sizes: np.ndarray,
                         pad_to: Optional[int] = None,

@@ -30,8 +30,11 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import queue
 import re
+import threading
 import time
+import warnings
 from typing import Dict, Iterator, List, Optional, Tuple, Type, Union
 
 import jax
@@ -40,6 +43,7 @@ import numpy as np
 from repro.checkpoint import store
 from repro.core import costmodel as cm
 from repro.core.ddsra import RoundDecision, Workload
+from repro.core.lyapunov import update_queues_realized
 from repro.core.network import Network, NetworkConfig
 from repro.core.participation import (DataStats, divergence_bound,
                                       participation_rates)
@@ -49,6 +53,7 @@ from repro.fl import cohort as cohort_lib
 from repro.fl import split as split_lib
 from repro.fl.data import (CohortLayout, make_fl_dataset, sample_batch,
                            sample_cohort_batch)
+from repro.fl.faults import FaultModel
 from repro.fl.roles import BaseStation, Device, Gateway
 from repro.models import registry as model_registry
 from repro.models import vgg
@@ -101,6 +106,25 @@ class Scenario:
     # upload-delay/energy terms (None = the model's native precision;
     # dtype="bf16" implies 16 unless overridden — e.g. 8 for int8 uploads)
     upload_bits: Optional[float] = None
+    # fault-injection axes (engine="async" only; see repro.fl.faults):
+    # per-round, per-device probabilities of being offline at dispatch
+    # (churn), of losing the trained update mid-round (dropout), and of
+    # straggling — an Exp(mean=straggler_scale) multiplicative extra delay
+    # factor fires with probability straggler_frac. All zero = no faults.
+    churn: float = 0.0
+    dropout: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_scale: float = 0.0
+    # FedBuff-style buffered aggregation (engine="async"): aggregate once
+    # buffer_k gateway updates have landed; None = drain the round's whole
+    # dispatched cohort first (the synchronous barrier expressed in
+    # buffered form — the degenerate-parity oracle against CohortEngine).
+    buffer_k: Optional[int] = None
+    # staleness weighting s(tau) = (1 + tau)^(-alpha) applied to buffered
+    # updates tau aggregation-versions old (0.5 = FedBuff's 1/sqrt(1+tau));
+    # updates older than max_staleness versions are discarded (None = keep).
+    staleness_alpha: float = 0.5
+    max_staleness: Optional[int] = None
     net: NetworkConfig = dataclasses.field(default_factory=NetworkConfig)
 
     @property
@@ -119,12 +143,34 @@ class Scenario:
 
     @classmethod
     def from_json(cls, d: dict) -> "Scenario":
-        """Rebuild from :meth:`to_json` output; missing fields (e.g. in
-        checkpoints from older versions) take their defaults."""
+        """Rebuild from :meth:`to_json` output, tolerating version skew in
+        both directions: fields *missing* from ``d`` (checkpoints/sweep
+        JSONs written before the field existed) take their dataclass
+        defaults, and *unknown* fields (written by a newer version) are
+        dropped with a warning instead of raising — so old artifacts keep
+        loading after new axes land, and new artifacts degrade gracefully
+        on old code. The same applies to the nested ``net`` config."""
         d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            warnings.warn(
+                f"Scenario.from_json: ignoring unknown fields {unknown} "
+                "(written by a newer version?)", stacklevel=2)
+            for k in unknown:
+                d.pop(k)
         net = d.pop("net", {})
         if isinstance(net, dict):
             net = dict(net)
+            net_known = {f.name for f in dataclasses.fields(NetworkConfig)}
+            net_unknown = sorted(set(net) - net_known)
+            if net_unknown:
+                warnings.warn(
+                    "Scenario.from_json: ignoring unknown net fields "
+                    f"{net_unknown} (written by a newer version?)",
+                    stacklevel=2)
+                for k in net_unknown:
+                    net.pop(k)
             for k in ("f_dev_range", "dist_range"):
                 if k in net:
                     net[k] = tuple(net[k])
@@ -142,18 +188,34 @@ class Scenario:
 
 @dataclasses.dataclass
 class RoundRecord:
-    """Telemetry for one simulated round (yielded by Simulation.rounds())."""
+    """Telemetry for one simulated round (yielded by Simulation.rounds()).
+
+    The staleness/fault fields are filled by the buffered async engine
+    (``repro.fl.async_engine``); synchronous engines leave them at their
+    barrier-semantics values (one aggregation per trained round, staleness
+    0, no faults).
+    """
     t: int
     selected: np.ndarray               # (M,) gateway participation this round
     trained: List[int]                 # gateways that actually trained
     l_n: np.ndarray                    # (N,) per-device partition points
-    delay: float                       # round delay (max over gateways)
+    delay: float                       # realized round delay (time advanced)
     cum_delay: float
     queues: np.ndarray                 # (M,) virtual-queue backlog
     losses: np.ndarray                 # (M,) per-gateway local losses
     failures: int                      # resource-infeasible gateways
     boundary_rms: Optional[np.ndarray] = None   # (N,) when requested
     accuracy: Optional[float] = None   # test accuracy on eval rounds
+    # -- staleness / fault telemetry (async engine) ----------------------
+    aggregations: int = 0              # buffer flushes applied this round
+    staleness_mean: float = 0.0        # mean tau over updates aggregated
+    staleness_max: int = 0             # max tau over updates aggregated
+    stale_discarded: int = 0           # updates dropped for tau > max_staleness
+    dropped_devices: int = 0           # churned offline at dispatch
+    lost_devices: int = 0              # trained, update lost mid-round
+    straggler_devices: int = 0         # surviving devices that straggled
+    buffer_fill: int = 0               # buffer occupancy at round end
+    inflight: int = 0                  # updates still in flight at round end
 
 
 @dataclasses.dataclass
@@ -196,6 +258,33 @@ def make_engine(name: str) -> "Engine":
     return ENGINES[name]()
 
 
+@dataclasses.dataclass
+class RoundOutcome:
+    """What actually happened when an engine executed a scheduled round.
+
+    Synchronous engines realize exactly what was scheduled (``realized``
+    stays ``None`` — the policy's own queue update stands); the buffered
+    async engine reports realized completion instead: the time actually
+    advanced (straggler tails included), which gateways' updates actually
+    landed, and the staleness/fault telemetry threaded into
+    :class:`RoundRecord`.
+    """
+    delay: float                       # realized time advanced this round
+    boundary_rms: Optional[np.ndarray] = None
+    # (M,) bool realized participation indicator for the Lyapunov queue
+    # update (lyapunov.update_queues_realized); None = as scheduled.
+    realized: Optional[np.ndarray] = None
+    aggregations: int = 0
+    staleness_mean: float = 0.0
+    staleness_max: int = 0
+    stale_discarded: int = 0
+    dropped_devices: int = 0
+    lost_devices: int = 0
+    straggler_devices: int = 0
+    buffer_fill: int = 0
+    inflight: int = 0
+
+
 class Engine:
     """Protocol: how a scheduled round is executed on the model."""
     name: str
@@ -203,6 +292,10 @@ class Engine:
     # rejects a Scenario whose ``dtype`` the chosen engine can't honor
     # (silently training in f32 would falsify the priced upload_bits).
     supported_dtypes: Tuple[str, ...] = ("f32",)
+    # whether the engine honors the Scenario fault axes (churn/dropout/
+    # stragglers) and buffer_k; Simulation rejects active fault axes on
+    # engines that would silently train fault-free (falsified sweeps).
+    supports_faults: bool = False
 
     def estimate_stats(self, sim: "Simulation", params) -> DataStats:
         """Estimate the per-device sigma_n/delta_n/L_n statistics the
@@ -215,6 +308,42 @@ class Engine:
         """Train one round in-place on ``sim`` (params + per-gateway losses);
         returns the (N,) boundary-activation RMS when requested/supported."""
         raise NotImplementedError
+
+    def run_round(self, sim: "Simulation", dec: RoundDecision,
+                  trained: List[int], l_n: np.ndarray,
+                  gw_delay: Dict[int, float],
+                  boundary: bool = False) -> RoundOutcome:
+        """Execute one scheduled round and report what actually happened.
+
+        Default (synchronous) semantics: train the scheduled cohort via
+        :meth:`train_round`, realize exactly the scheduled delays (the
+        FedAvg barrier waits for the slowest gateway, ``max`` over
+        ``gw_delay``), and leave the policy's queue update untouched. The
+        async engine overrides this wholesale — buffered aggregation,
+        fault injection, realized-delay accounting.
+        """
+        rms = self.train_round(sim, trained, l_n, with_boundary=boundary)
+        return RoundOutcome(delay=max(gw_delay.values(), default=0.0),
+                            boundary_rms=rms,
+                            aggregations=1 if trained else 0)
+
+    def inflight_counts(self, sim: "Simulation") -> Optional[np.ndarray]:
+        """(M,) per-gateway count of dispatched-but-not-landed updates,
+        offered to policies via ``RoundContext.inflight``; synchronous
+        engines have none (``None``)."""
+        return None
+
+    def state_dict(self, sim: "Simulation"):
+        """Engine-internal state to checkpoint, as ``(meta, arrays)`` —
+        ``meta`` a JSON-serializable dict stored in the ``sim_*.json``
+        manifest, ``arrays`` a pytree written beside the params (prefix
+        ``engine_``) — or ``None`` for stateless engines (the default)."""
+        return None
+
+    def load_state_dict(self, sim: "Simulation", meta: dict, path,
+                        step: int) -> None:
+        """Restore what :meth:`state_dict` captured (default: nothing)."""
+        return None
 
 
 @register_engine("cohort")
@@ -278,13 +407,16 @@ class CohortEngine(Engine):
                          np.maximum(np.asarray(lips), 0.1),
                          sim.d_tilde.astype(float))
 
-    def train_round(self, sim: "Simulation", trained: List[int],
-                    l_n: np.ndarray,
-                    with_boundary: bool = False) -> Optional[np.ndarray]:
-        """Pack the scheduled devices into the fixed slot layout and run
-        the fused round in-place on ``sim``."""
-        if not trained:
-            return None
+    def _pack_round(self, sim: "Simulation", trained: List[int],
+                    l_n: np.ndarray):
+        """Pack the scheduled devices into the fixed slot layout.
+
+        Owns the batch-draw ordering contract (draws come from ``sim.rng``
+        in gateway-major device order, identical for every engine built on
+        this packing — the async engine reuses it verbatim so its degenerate
+        configuration replays the cohort engine's exact RNG stream).
+        Returns (device_ids, batch, layout, l_slot, w_slot, slot_gw).
+        """
         device_ids: List[int] = []
         for m in trained:
             device_ids.extend(dev.idx for dev in sim.gateways[m].devices)
@@ -304,6 +436,17 @@ class CohortEngine(Engine):
             l_slot[s] = l_n[n]
             w_slot[s] = sim.d_tilde[n]
             slot_gw[s, sim.net.assign[n]] = 1.0
+        return device_ids, batch, layout, l_slot, w_slot, slot_gw
+
+    def train_round(self, sim: "Simulation", trained: List[int],
+                    l_n: np.ndarray,
+                    with_boundary: bool = False) -> Optional[np.ndarray]:
+        """Pack the scheduled devices into the fixed slot layout and run
+        the fused round in-place on ``sim``."""
+        if not trained:
+            return None
+        device_ids, batch, layout, l_slot, w_slot, slot_gw = \
+            self._pack_round(sim, trained, l_n)
         new_global, gw_loss, _, _, boundary, _ = self._fused_round(
             sim, sim.params, batch, l_slot, w_slot, slot_gw,
             with_boundary=with_boundary, with_gateway_models=False)
@@ -415,6 +558,44 @@ class SequentialEngine(Engine):
 PolicyLike = Union[str, object, None]
 
 
+class _CheckpointWriter:
+    """One daemon thread draining checkpoint write jobs in FIFO order.
+
+    ``submit`` returns immediately; ``flush`` blocks until every submitted
+    job has fully finished and re-raises the first exception any job hit,
+    so callers get one crisp completion/failure point instead of silent
+    data loss. Jobs must close over *snapshots* — the caller's state may
+    mutate while the write is in flight.
+    """
+
+    def __init__(self):
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name="ckpt-writer")
+        self._thread.start()
+
+    def _loop(self):
+        while True:
+            job = self._q.get()
+            try:
+                job()
+            except BaseException as e:      # surfaced at the next flush()
+                if self._err is None:
+                    self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, job) -> None:
+        self._q.put(job)
+
+    def flush(self) -> None:
+        self._q.join()
+        err, self._err = self._err, None
+        if err is not None:
+            raise err
+
+
 class Simulation:
     """Composable FL simulation over a :class:`Scenario`.
 
@@ -435,6 +616,16 @@ class Simulation:
             raise ValueError(
                 f"engine {sc.engine!r} supports dtypes "
                 f"{self.engine.supported_dtypes}, not {sc.dtype!r}")
+        if sc.buffer_k is not None and sc.buffer_k < 1:
+            raise ValueError(f"Scenario.buffer_k must be >= 1 or None, "
+                             f"got {sc.buffer_k}")
+        self.faults = FaultModel.from_scenario(sc)
+        if ((self.faults.active or sc.buffer_k is not None)
+                and not self.engine.supports_faults):
+            raise ValueError(
+                f"engine {sc.engine!r} is synchronous: it cannot honor "
+                f"fault axes (churn/dropout/stragglers) or buffer_k; use "
+                f"engine='async'")
         self.net = Network(sc.net, np.random.default_rng(sc.seed))
         self.rng = np.random.default_rng(sc.seed + 1)
         ncfg = self.net.cfg
@@ -502,6 +693,7 @@ class Simulation:
 
         self._policy = None
         self.run_seed = sc.seed   # threaded into stochastic policies
+        self._ckpt_writer: Optional[_CheckpointWriter] = None
         self.restart()
 
     # -- state ----------------------------------------------------------
@@ -591,14 +783,17 @@ class Simulation:
         ncfg = self.net.cfg
         t = self.t
         st = self.net.draw()
+        prev_queues = self.queues
         ctx = RoundContext(t, self.workload, self.net, st, self.queues,
-                           self.gamma, sc.v, losses=self.losses.copy())
+                           self.gamma, sc.v, losses=self.losses.copy(),
+                           inflight=self.engine.inflight_counts(self))
         dec: RoundDecision = policy.schedule(ctx)
         self.queues = dec.queues
 
         # resolve the schedule into trained gateways + per-device cuts
         trained, l_n = [], np.zeros(ncfg.n_devices, int)
-        round_delay, failures = 0.0, 0
+        gw_delay: Dict[int, float] = {}
+        failures = 0
         for m in np.where(dec.selected)[0]:
             j = int(np.argmax(dec.assignment[m]))
             sol = dec.solutions.get((int(m), j))
@@ -607,14 +802,24 @@ class Simulation:
             if not sol.feasible or not np.isfinite(sol.delay):
                 failures += 1     # energy/memory violation: round fails
                 continue
-            round_delay = max(round_delay, sol.delay)
+            gw_delay[int(m)] = float(sol.delay)
             trained.append(int(m))
             for i, dev in enumerate(self.gateways[m].devices):
                 l_n[dev.idx] = int(sol.l_split[i])
 
-        rms = self.engine.train_round(self, trained, l_n,
-                                      with_boundary=boundary)
-        self.delay_sum += round_delay
+        out = self.engine.run_round(self, dec, trained, l_n, gw_delay,
+                                    boundary=boundary)
+        # Asynchronous engines report *realized* participation: updates that
+        # actually landed at the server this round (late arrivals included,
+        # churned ones excluded). When it diverges from the schedule, redo
+        # Eq. (14) from the pre-decision queues with the realized indicator;
+        # when it matches (every synchronous engine, and fault-free async
+        # rounds) keep the scheduler's own queues bit-identically.
+        if out.realized is not None and \
+                not np.array_equal(out.realized, dec.selected):
+            self.queues = update_queues_realized(prev_queues, out.realized,
+                                                 self.gamma)
+        self.delay_sum += out.delay
         self.t = t + 1
 
         acc = None
@@ -622,11 +827,20 @@ class Simulation:
             acc = vgg.accuracy(self.plan, self.params,
                                self.ds.x_test, self.ds.y_test)
         return RoundRecord(t=t, selected=dec.selected.copy(),
-                           trained=trained, l_n=l_n, delay=round_delay,
+                           trained=trained, l_n=l_n, delay=out.delay,
                            cum_delay=self.delay_sum,
                            queues=self.queues.copy(),
                            losses=self.losses.copy(), failures=failures,
-                           boundary_rms=rms, accuracy=acc)
+                           boundary_rms=out.boundary_rms, accuracy=acc,
+                           aggregations=out.aggregations,
+                           staleness_mean=out.staleness_mean,
+                           staleness_max=out.staleness_max,
+                           stale_discarded=out.stale_discarded,
+                           dropped_devices=out.dropped_devices,
+                           lost_devices=out.lost_devices,
+                           straggler_devices=out.straggler_devices,
+                           buffer_fill=out.buffer_fill,
+                           inflight=out.inflight)
 
     def run(self, policy: PolicyLike = None, *,
             boundary: bool = False) -> FLResult:
@@ -664,20 +878,32 @@ class Simulation:
 
     # -- checkpointing ---------------------------------------------------
 
-    def save(self, path, keep_last: Optional[int] = None) -> pathlib.Path:
+    def save(self, path, keep_last: Optional[int] = None, *,
+             block: bool = False) -> pathlib.Path:
         """Checkpoint params + full run state at round ``self.t``.
+
+        Non-blocking by default: the run state is *snapshotted* on the
+        calling thread (cheap — references to immutable jax arrays plus
+        small host copies), then a single background writer thread performs
+        the actual serialization and atomic renames, so per-round
+        checkpointing no longer stalls the round loop on disk I/O. The
+        returned path may not exist yet — call :meth:`flush` before reading
+        it (or pass ``block=True`` to write inline). Every file lands via
+        tmp + ``os.replace``, so a concurrent :meth:`resume` only ever sees
+        absent or complete checkpoints, never partial ones.
 
         ``keep_last`` (default: ``Scenario.keep_last``) rotates the
         checkpoint directory: after this save only the newest ``keep_last``
         round checkpoints survive — the ``step_*.npz`` param files (GC'd by
-        ``store.save_pytree``) and their ``sim_*.json`` run-state manifests
-        alike — so per-round saving on long runs uses bounded disk.
+        ``store.save_pytree``), their ``sim_*.json`` run-state manifests and
+        any ``engine_*`` side-cars alike — so per-round saving on long runs
+        uses bounded disk.
         """
         if keep_last is None:
             keep_last = self.scenario.keep_last
         path = pathlib.Path(path)
-        store.save_pytree(path, self.params, step=self.t,
-                          keep_last=keep_last)
+        step = self.t
+        params = self.params                       # immutable jax pytree
         pol = None
         if self._policy is not None:
             name = getattr(self._policy, "name", None)
@@ -686,9 +912,11 @@ class Simulation:
             # silently swap in the scenario default mid-experiment.
             pol = {"name": name if name in POLICIES else None,
                    "state": policy_state(self._policy)}
+        eng = self.engine.state_dict(self)
+        eng_meta, eng_arrays = eng if eng is not None else (None, None)
         state = {
             "scenario": self.scenario.to_json(),
-            "t": self.t,
+            "t": step,
             "run_seed": self.run_seed,
             "queues": self.queues.tolist(),
             "losses": self.losses.tolist(),
@@ -700,16 +928,40 @@ class Simulation:
             "stats": {f.name: _arr_to_json(getattr(self.stats, f.name))
                       for f in dataclasses.fields(self.stats)},
             "policy": pol,
+            "engine": eng_meta,
         }
-        fname = path / f"sim_{self.t:08d}.json"
-        fname.write_text(json.dumps(state))
-        if keep_last is not None:
-            kept = set(store.all_steps(path))   # post-GC param checkpoints
-            for f in path.glob("sim_*.json"):
-                m = re.match(r"sim_(\d+)\.json", f.name)
-                if m and int(m.group(1)) not in kept:
-                    f.unlink()
+        payload = json.dumps(state).encode()       # serialized pre-submit
+        fname = path / f"sim_{step:08d}.json"
+
+        def job():
+            store.save_pytree(path, params, step=step, keep_last=keep_last)
+            if eng_arrays is not None:
+                store.save_pytree(path, eng_arrays, step=step,
+                                  prefix="engine")
+            store.atomic_write_bytes(fname, lambda f: f.write(payload))
+            if keep_last is not None:
+                kept = set(store.all_steps(path))  # post-GC param ckpts
+                for fam in ("sim", "engine"):
+                    for f in path.glob(f"{fam}_*.*"):
+                        m = re.match(rf"{fam}_(\d+)\.(json|npz)", f.name)
+                        if m and int(m.group(1)) not in kept:
+                            f.unlink(missing_ok=True)
+
+        if block:
+            self.flush()      # keep FIFO order with pending async saves
+            job()
+        else:
+            if self._ckpt_writer is None:
+                self._ckpt_writer = _CheckpointWriter()
+            self._ckpt_writer.submit(job)
         return fname
+
+    def flush(self) -> None:
+        """Block until every pending non-blocking :meth:`save` has fully
+        landed on disk; re-raises the first error any background write hit.
+        A no-op when nothing is pending."""
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.flush()
 
     @classmethod
     def resume(cls, path) -> "Simulation":
@@ -747,6 +999,9 @@ class Simulation:
                 set_policy_state(sim._policy, pol.get("state"))
             else:
                 sim._policy_unresumable = True
+        eng_meta = state.get("engine")
+        if eng_meta is not None:
+            sim.engine.load_state_dict(sim, eng_meta, path, step)
         return sim
 
 
@@ -771,6 +1026,8 @@ def _unflatten_like(flat: np.ndarray, tree):
     return out
 
 
-# Registers ShardedCohortEngine under "sharded" in ENGINES. Must stay at the
-# bottom: repro.fl.shard subclasses CohortEngine from this module.
+# Registers ShardedCohortEngine under "sharded" and AsyncCohortEngine under
+# "async" in ENGINES. Must stay at the bottom: both modules subclass
+# CohortEngine from this module.
 import repro.fl.shard  # noqa: E402,F401
+import repro.fl.async_engine  # noqa: E402,F401

@@ -1,0 +1,259 @@
+"""AsyncCohortEngine: degenerate parity, determinism, staleness semantics,
+checkpoint/resume through the buffer, and the non-blocking save contract.
+
+The anchor test is degenerate parity: ``engine="async"`` with every fault
+axis at 0 and ``buffer_k=None`` (the barrier sentinel) must replay
+``engine="cohort"`` — same schedule, same queue trajectory, same losses and
+params up to float re-association (the async path averages gateway models
+with ``buffer_fedavg`` where the fused round averages slots directly).
+Everything the fault/buffer machinery adds is then tested *relative to that
+oracle*.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.network import NetworkConfig
+from repro.fl import ENGINES, AsyncCohortEngine, Scenario, Simulation
+
+
+def _net(**kw):
+    base = dict(n_gateways=4, n_devices=8, n_channels=2)
+    base.update(kw)
+    return NetworkConfig(**base)
+
+
+def _scenario(**kw):
+    base = dict(model="mlp", rounds=5, eval_every=2, seed=3,
+                max_dataset=120, net=_net(), engine="async")
+    base.update(kw)
+    return Scenario(**base)
+
+
+def _faulty(**kw):
+    base = dict(churn=0.15, dropout=0.1, straggler_frac=0.4,
+                straggler_scale=2.0, buffer_k=1, rounds=8, eval_every=10)
+    base.update(kw)
+    return _scenario(**base)
+
+
+def _params_vec(sim):
+    return np.concatenate([np.ravel(np.asarray(x))
+                           for x in jax.tree.leaves(sim.params)])
+
+
+def _assert_records_identical(a, b):
+    """Bit-exact record equality (same engine on both sides)."""
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f.name)
+        else:
+            assert va == vb, (f.name, va, vb)
+
+
+def test_async_engine_registered():
+    assert "async" in ENGINES and ENGINES["async"] is AsyncCohortEngine
+    assert AsyncCohortEngine.supports_faults
+
+
+# ---------------------------------------------------------------------------
+# degenerate parity: zero faults + barrier == CohortEngine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["ddsra", "round_robin"])
+def test_degenerate_parity_with_cohort(policy):
+    sync = Simulation(_scenario(engine="cohort"))
+    full_sync = list(sync.rounds(policy))
+    asyn = Simulation(_scenario(engine="async"))
+    full_async = list(asyn.rounds(policy))
+
+    for a, b in zip(full_sync, full_async):
+        assert a.t == b.t and a.trained == b.trained
+        np.testing.assert_array_equal(a.selected, b.selected)
+        np.testing.assert_array_equal(a.l_n, b.l_n)
+        # identical schedule => identical queue trajectory, bit-for-bit
+        # (the realized-queue override must not fire on fault-free rounds)
+        np.testing.assert_array_equal(a.queues, b.queues)
+        assert a.failures == b.failures
+        np.testing.assert_allclose(a.delay, b.delay, rtol=1e-9)
+        np.testing.assert_allclose(a.losses, b.losses, atol=1e-5)
+        if a.accuracy is not None:
+            np.testing.assert_allclose(a.accuracy, b.accuracy, atol=1e-2)
+        # barrier-mode telemetry collapses to synchronous semantics
+        assert b.aggregations == a.aggregations
+        assert b.staleness_max == 0 and b.stale_discarded == 0
+        assert b.buffer_fill == 0 and b.inflight == 0
+    np.testing.assert_allclose(_params_vec(sync), _params_vec(asyn),
+                               atol=1e-5)
+
+
+def test_degenerate_parity_survives_checkpoint_resume(tmp_path):
+    """Parity must hold even when the async run is checkpointed mid-stream
+    (the engine side-car state round-trips through save/resume)."""
+    sc = _scenario(engine="cohort", rounds=6)
+    full_sync = list(Simulation(sc).rounds("ddsra"))
+
+    asyn = Simulation(_scenario(engine="async", rounds=6))
+    it = asyn.rounds("ddsra")
+    head = [next(it) for _ in range(3)]
+    asyn.save(tmp_path)
+    asyn.flush()
+    resumed = Simulation.resume(tmp_path)
+    tail = list(resumed.rounds())
+    for a, b in zip(full_sync, head + tail):
+        np.testing.assert_array_equal(a.queues, b.queues)
+        np.testing.assert_allclose(a.losses, b.losses, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# determinism + fault telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_same_faults_same_records():
+    """The seed pins the whole faulted run: churn/straggler draws come from
+    the network stream, so two runs yield identical RoundRecord streams."""
+    a = list(Simulation(_faulty()).rounds("ddsra"))
+    b = list(Simulation(_faulty()).rounds("ddsra"))
+    for ra, rb in zip(a, b):
+        _assert_records_identical(ra, rb)
+    # and the faults actually fired somewhere in 8 rounds
+    assert sum(r.dropped_devices for r in a) > 0
+    assert sum(r.straggler_devices for r in a) > 0
+
+
+def test_fault_rates_do_not_shift_the_channel_stream():
+    """Two runs differing only in fault *rates* advance the network RNG
+    stream identically per round (the fixed-draw-count contract), and the
+    degenerate run advances it exactly like the synchronous engine (the
+    zero-draw contract)."""
+    sims = [Simulation(_faulty(churn=0.01, dropout=0.0)),
+            Simulation(_faulty(churn=0.6, dropout=0.3))]
+    for sim in sims:
+        next(sim.rounds("ddsra"))
+    assert (sims[0].net.rng.bit_generator.state
+            == sims[1].net.rng.bit_generator.state)
+
+    degen = Simulation(_scenario(engine="async"))
+    sync = Simulation(_scenario(engine="cohort"))
+    next(degen.rounds("ddsra"))
+    next(sync.rounds("ddsra"))
+    assert (degen.net.rng.bit_generator.state
+            == sync.net.rng.bit_generator.state)
+
+
+def test_staleness_accrues_and_max_staleness_discards():
+    """buffer_k=1 with two dispatches per round leaves updates in flight
+    across aggregations, so staleness must exceed 0; capping max_staleness
+    at 0 then turns exactly those late updates into discards."""
+    recs = list(Simulation(_faulty()).rounds("ddsra"))
+    assert max(r.staleness_max for r in recs) >= 1
+    assert all(r.aggregations in (0, 1) for r in recs)
+    assert any(r.inflight > 0 for r in recs)
+
+    capped = list(Simulation(_faulty(max_staleness=0)).rounds("ddsra"))
+    assert sum(r.stale_discarded for r in capped) > 0
+
+
+def test_inflight_counts_match_telemetry():
+    sim = Simulation(_faulty())
+    recs = list(sim.rounds("ddsra"))
+    counts = sim.engine.inflight_counts(sim)
+    assert counts.shape == (sim.net.cfg.n_gateways,)
+    assert counts.sum() == recs[-1].inflight
+
+
+def test_realized_queues_diverge_from_schedule_under_churn():
+    """With heavy churn some selected gateway's update never lands, so the
+    recorded queues must diverge from the scheduled Eq. (14) update — the
+    realized-participation feedback actually fired."""
+    from repro.core.lyapunov import update_queues
+    sc = _faulty(churn=0.5, rounds=10, straggler_frac=0.0,
+                 straggler_scale=0.0, buffer_k=None)   # land == same round
+    sim = Simulation(sc)
+    prev = np.zeros(sim.net.cfg.n_gateways)
+    diverged = False
+    for rec in sim.rounds("ddsra"):
+        scheduled = update_queues(prev, rec.selected, sim.gamma)
+        if not np.array_equal(scheduled, rec.queues):
+            diverged = True
+        prev = rec.queues
+    assert diverged
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume through a partially-filled buffer
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_resume_bit_identical_through_buffer(tmp_path):
+    """Interrupting a faulted buffered run mid-stream and resuming replays
+    the uninterrupted run record-for-record — including rounds whose
+    aggregation consumes updates dispatched *before* the checkpoint."""
+    sc = _faulty(buffer_k=3)          # buffer carries entries across rounds
+    uninterrupted = Simulation(sc)
+    full = list(uninterrupted.rounds("ddsra"))
+
+    sim = Simulation(sc)
+    it = sim.rounds("ddsra")
+    head, cut = [], 0
+    for rec in it:
+        head.append(rec)
+        cut = rec.t + 1
+        if rec.buffer_fill > 0 or rec.inflight > 0:
+            break                     # engine state is genuinely non-empty
+    assert head[-1].buffer_fill > 0 or head[-1].inflight > 0
+    sim.save(tmp_path)
+    sim.flush()
+    assert list(tmp_path.glob("engine_*.npz"))     # side-car state written
+
+    resumed = Simulation.resume(tmp_path)
+    assert resumed.t == cut
+    tail = list(resumed.rounds())
+    assert len(head) + len(tail) == len(full)
+    for a, b in zip(full, head + tail):
+        _assert_records_identical(a, b)
+    np.testing.assert_array_equal(_params_vec(uninterrupted),
+                                  _params_vec(resumed))
+
+
+# ---------------------------------------------------------------------------
+# the non-blocking save contract
+# ---------------------------------------------------------------------------
+
+
+def test_save_is_nonblocking_and_flush_completes(tmp_path):
+    sim = Simulation(_faulty())
+    it = sim.rounds("ddsra")
+    next(it)
+    fname = sim.save(tmp_path)
+    sim.flush()                       # after flush: everything on disk
+    assert fname.exists()
+    assert not list(tmp_path.glob("*.tmp")), "atomic renames left tmp files"
+    assert Simulation.resume(tmp_path).t == 1
+
+
+def test_save_block_true_writes_inline(tmp_path):
+    sim = Simulation(_scenario(rounds=2))
+    next(sim.rounds("round_robin"))
+    fname = sim.save(tmp_path, block=True)
+    assert fname.exists()             # no flush needed
+    assert Simulation.resume(tmp_path).t == 1
+
+
+def test_flush_reraises_background_write_errors(tmp_path):
+    sim = Simulation(_scenario(rounds=2))
+    next(sim.rounds("round_robin"))
+    target = tmp_path / "not_a_dir"
+    target.write_text("occupied")     # mkdir under a file must fail
+    sim.save(target / "ckpt")
+    with pytest.raises(OSError):
+        sim.flush()
+    sim.flush()                       # the error is consumed; writer lives
+    sim.save(tmp_path)                # and still accepts new work
+    sim.flush()
+    assert Simulation.resume(tmp_path).t == 1

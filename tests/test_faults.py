@@ -1,0 +1,151 @@
+"""Fault-model semantics and the Scenario fault axes.
+
+The load-bearing contracts here are the RNG ones (see the module docstring
+of ``repro.fl.faults``): an inactive model must consume zero network-stream
+draws — that is what pins the async==cohort degenerate parity — and an
+active model must consume a fixed number of draws per round regardless of
+its rates, so sweeps over fault rates still face identical channel states.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.network import NetworkConfig
+from repro.fl import FaultModel, Scenario, Simulation, draw_round_faults
+from repro.fl.faults import RoundFaults
+
+
+def _net():
+    return NetworkConfig(n_gateways=4, n_devices=8, n_channels=2)
+
+
+def _scenario(**kw):
+    base = dict(model="mlp", rounds=3, eval_every=10, seed=0,
+                max_dataset=120, net=_net())
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ---------------------------------------------------------------------------
+# FaultModel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("field,value", [
+    ("churn", -0.1), ("churn", 1.0), ("dropout", 1.5),
+    ("straggler_frac", -1e-9), ("straggler_scale", -0.5)])
+def test_fault_model_validates_ranges(field, value):
+    with pytest.raises(ValueError, match=field):
+        FaultModel(**{field: value})
+
+
+def test_active_property():
+    assert not FaultModel().active
+    # straggler_frac without a scale (or vice versa) can never fire
+    assert not FaultModel(straggler_frac=0.5).active
+    assert not FaultModel(straggler_scale=2.0).active
+    assert FaultModel(churn=0.1).active
+    assert FaultModel(dropout=0.1).active
+    assert FaultModel(straggler_frac=0.5, straggler_scale=2.0).active
+
+
+def test_from_scenario_reads_the_fault_axes():
+    sc = _scenario(churn=0.2, dropout=0.1, straggler_frac=0.3,
+                   straggler_scale=1.5)
+    fm = FaultModel.from_scenario(sc)
+    assert fm == FaultModel(0.2, 0.1, 0.3, 1.5)
+
+
+# ---------------------------------------------------------------------------
+# the RNG contract
+# ---------------------------------------------------------------------------
+
+
+def test_inactive_model_consumes_zero_draws():
+    rng = np.random.default_rng(7)
+    before = rng.bit_generator.state
+    faults = draw_round_faults(rng, FaultModel(), 16)
+    assert rng.bit_generator.state == before
+    assert not faults.dropped.any() and not faults.lost.any()
+    assert (faults.straggle == 0).all()
+
+
+def test_active_model_draw_count_is_rate_invariant():
+    """Runs differing only in fault *rates* must advance the stream
+    identically: the next draw after the fault block is the same number."""
+    probes = []
+    for model in (FaultModel(churn=0.01), FaultModel(churn=0.9, dropout=0.9),
+                  FaultModel(straggler_frac=0.5, straggler_scale=3.0)):
+        rng = np.random.default_rng(123)
+        draw_round_faults(rng, model, 16)
+        probes.append(rng.uniform())
+    assert probes[0] == probes[1] == probes[2]
+
+
+def test_draws_are_deterministic_and_disjoint():
+    rng = np.random.default_rng(11)
+    model = FaultModel(churn=0.4, dropout=0.4, straggler_frac=0.5,
+                       straggler_scale=2.0)
+    a = draw_round_faults(rng, model, 64)
+    b = draw_round_faults(np.random.default_rng(11), model, 64)
+    for f in dataclasses.fields(RoundFaults):
+        np.testing.assert_array_equal(getattr(a, f.name), getattr(b, f.name))
+    # churned devices never also count as lost, and never straggle
+    assert not (a.dropped & a.lost).any()
+    assert (a.straggle[a.dropped] == 0).all()
+    assert (a.straggle >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Scenario axes: round-trip, forward-compat, engine gating
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_fault_axes_round_trip():
+    sc = _scenario(engine="async", churn=0.2, dropout=0.1,
+                   straggler_frac=0.3, straggler_scale=1.5, buffer_k=2,
+                   staleness_alpha=0.25, max_staleness=4)
+    assert Scenario.from_json(sc.to_json()) == sc
+
+
+def test_from_json_pre_fault_era_checkpoint_defaults():
+    """A scenario dict written before the fault axes existed (PR 6 era)
+    loads with every new axis at its fault-free default."""
+    sc = _scenario()
+    d = sc.to_json()
+    for k in ("churn", "dropout", "straggler_frac", "straggler_scale",
+              "buffer_k", "staleness_alpha", "max_staleness"):
+        d.pop(k)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # no spurious warnings either
+        back = Scenario.from_json(d)
+    assert back == sc
+    assert back.buffer_k is None and back.churn == 0.0
+
+
+def test_from_json_unknown_fields_warn_and_are_ignored():
+    """A checkpoint from a *newer* version loads: unknown fields (top-level
+    and nested net) are dropped with a warning instead of crashing."""
+    d = _scenario().to_json()
+    d["flux_capacitor"] = 1.21
+    d["net"]["warp_factor"] = 9
+    with pytest.warns(UserWarning, match="flux_capacitor"):
+        sc = Scenario.from_json(d)
+    assert sc == _scenario()
+    with pytest.warns(UserWarning, match="warp_factor"):
+        Scenario.from_json(d)
+
+
+@pytest.mark.parametrize("engine", ["cohort", "sequential", "sharded"])
+def test_sync_engines_reject_active_faults(engine):
+    with pytest.raises(ValueError, match="synchronous"):
+        Simulation(_scenario(engine=engine, churn=0.1))
+    with pytest.raises(ValueError, match="synchronous"):
+        Simulation(_scenario(engine=engine, buffer_k=2))
+
+
+def test_buffer_k_validated():
+    with pytest.raises(ValueError, match="buffer_k"):
+        Simulation(_scenario(engine="async", buffer_k=0))

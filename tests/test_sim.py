@@ -234,6 +234,7 @@ def test_checkpoint_resume_bit_identical(engine, policy, tmp_path):
     it = sim.rounds(policy)
     head = [next(it) for _ in range(3)]
     sim.save(tmp_path)
+    sim.flush()          # save() is non-blocking by default
     resumed = Simulation.resume(tmp_path)
     assert resumed.t == 3
     tail = list(resumed.rounds())        # keeps the restored policy
@@ -265,6 +266,7 @@ def test_save_keep_last_rotates_and_resumes(tmp_path):
     for _ in range(3):
         next(it)
         sim.save(tmp_path)                     # keep_last from the Scenario
+    sim.flush()
     npz = sorted(f.name for f in tmp_path.glob("step_*.npz"))
     manifests = sorted(f.name for f in tmp_path.glob("sim_*.json"))
     assert npz == ["step_00000002.npz", "step_00000003.npz"]
@@ -284,6 +286,7 @@ def test_resume_skips_stats_estimation_and_matches(tmp_path):
     sim = Simulation(_scenario())
     next(sim.rounds("ddsra"))
     sim.save(tmp_path)
+    sim.flush()
     resumed = Simulation.resume(tmp_path)
     assert resumed.stats_seconds < sim.stats_seconds / 10
     for f in dataclasses.fields(sim.stats):
@@ -305,6 +308,7 @@ def test_resume_with_custom_policy_refuses_silent_swap(tmp_path):
     it = sim.rounds(Greedy())
     next(it)
     sim.save(tmp_path)
+    sim.flush()
     resumed = Simulation.resume(tmp_path)
     with pytest.raises(ValueError, match="custom policy"):
         next(resumed.rounds())
