@@ -58,6 +58,19 @@ class GatewaySolution:
 
 @dataclasses.dataclass
 class RoundDecision:
+    """One round's schedule plus the policy's post-decision queue state.
+
+    ``queues`` contract: it must be the Eq. (14) update of the pre-decision
+    queues under the *scheduled* indicator ``selected``. Synchronous
+    engines apply it verbatim. Under ``engine="async"`` realized
+    participation can diverge from the schedule (churn, stragglers landing
+    late), and when it does the simulation *discards* ``queues`` and redoes
+    Eq. (14) from the pre-decision queues with the realized indicator
+    (``lyapunov.update_queues_realized``) — a policy encoding a different
+    queue law in ``queues`` would be silently overridden on exactly those
+    rounds, so custom non-Eq.-(14) queue dynamics are only honored on
+    synchronous engines (or fault-free async rounds).
+    """
     assignment: np.ndarray         # I (M, J)
     selected: np.ndarray           # (M,) bool
     lam: np.ndarray                # (M, J) Lambda

@@ -90,6 +90,19 @@ class AsyncCohortEngine(CohortEngine):
         self._version = 0                         # completed aggregations
         self._seq = 0                             # dispatch counter (ties)
 
+    def reset(self, sim) -> None:
+        """Drop every in-flight and parked update and rewind the counters.
+
+        ``Simulation.restart()`` (hence ``run()`` and the fair-sweep
+        ``reset()``) rewinds the simulated clock to 0; an update dispatched
+        under the old clock carries a stale arrival time and a stale
+        version, so letting it land would aggregate a previous run's models
+        into this one and corrupt both params and staleness telemetry."""
+        self._pending = []
+        self._buffer = []
+        self._version = 0
+        self._seq = 0
+
     # -- the round -------------------------------------------------------
 
     def run_round(self, sim, dec: RoundDecision, trained: List[int],
@@ -208,24 +221,29 @@ class AsyncCohortEngine(CohortEngine):
         leaves the rest in flight; a round whose buffer never fills costs
         zero realized delay (dispatch is instantaneous on the server
         clock). Arrivals earlier than ``now`` land free of charge.
+
+        The aggregation time is the max *arrival* over the whole aggregated
+        batch (clamped to ``now``) — arrivals are retained on each
+        :class:`BufferedUpdate` precisely so that an update parked in the
+        buffer across rounds (a heavy straggler landing into an under-full
+        buffer) still charges its full realized delay when an aggregation
+        finally consumes it, instead of only the arrivals popped this round.
         """
-        t_end = now
         if barrier:
             while self._pending:
-                arrival, _, upd = heapq.heappop(self._pending)
-                t_end = max(t_end, arrival)
+                _, _, upd = heapq.heappop(self._pending)
                 self._buffer.append(upd)
             if not self._buffer:
                 return 0.0, [], [], 0
         else:
             while self._pending and len(self._buffer) < buffer_k:
-                arrival, _, upd = heapq.heappop(self._pending)
-                t_end = max(t_end, arrival)
+                _, _, upd = heapq.heappop(self._pending)
                 self._buffer.append(upd)
             if len(self._buffer) < buffer_k:
                 return 0.0, [], [], 0       # keep waiting across rounds
 
         batch, self._buffer = self._buffer, []
+        t_end = max([now] + [u.arrival for u in batch])
         max_stale = sim.scenario.max_staleness
         fresh = [u for u in batch
                  if max_stale is None

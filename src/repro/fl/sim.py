@@ -27,6 +27,7 @@ sweeps), and ``save()``/``Simulation.resume()`` wired through
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import json
 import pathlib
@@ -333,6 +334,15 @@ class Engine:
         engines have none (``None``)."""
         return None
 
+    def reset(self, sim: "Simulation") -> None:
+        """Discard engine-internal *run* state (default: none).
+
+        Called from :meth:`Simulation.restart` — and therefore from
+        ``run()`` and ``reset()`` — so buffered engines drop in-flight and
+        parked updates when the clock rewinds; a stale update from a
+        previous run must never aggregate into a fresh one."""
+        return None
+
     def state_dict(self, sim: "Simulation"):
         """Engine-internal state to checkpoint, as ``(meta, arrays)`` —
         ``meta`` a JSON-serializable dict stored in the ``sim_*.json``
@@ -566,6 +576,12 @@ class _CheckpointWriter:
     so callers get one crisp completion/failure point instead of silent
     data loss. Jobs must close over *snapshots* — the caller's state may
     mutate while the write is in flight.
+
+    The thread is a daemon, so an atexit hook drains the queue at
+    interpreter shutdown: a process that exits without ever calling
+    ``flush`` still lands every submitted checkpoint on disk (a swallowed
+    background error is surfaced as a warning there, the best that can be
+    done that late).
     """
 
     def __init__(self):
@@ -574,6 +590,13 @@ class _CheckpointWriter:
         self._thread = threading.Thread(
             target=self._loop, daemon=True, name="ckpt-writer")
         self._thread.start()
+        atexit.register(self._drain_at_exit)
+
+    def _drain_at_exit(self) -> None:
+        self._q.join()
+        if self._err is not None:
+            warnings.warn(f"background checkpoint write failed and was "
+                          f"never flush()ed: {self._err!r}")
 
     def _loop(self):
         while True:
@@ -708,7 +731,10 @@ class Simulation:
 
     def restart(self) -> None:
         """Reset the *run* state (round counter, queues, losses, delay) while
-        keeping params and RNG streams — what a fresh ``run()`` call does."""
+        keeping params and RNG streams — what a fresh ``run()`` call does.
+        Engine-internal run state (the async engine's in-flight heap and
+        staleness buffer) is discarded too: the clock rewinds, so updates
+        from the previous run must not land in the next one."""
         ncfg = self.net.cfg
         self.t = 0
         self.queues = np.zeros(ncfg.n_gateways)
@@ -718,6 +744,7 @@ class Simulation:
         self.padding_stats = {"real_samples": 0.0, "padded_samples": 0.0}
         self._policy = None
         self._policy_unresumable = False
+        self.engine.reset(self)
 
     def reset(self, seed: Optional[int] = None) -> "Simulation":
         """Full reset for fair multi-policy sweeps.
@@ -852,6 +879,7 @@ class Simulation:
         """
         self.restart()
         records = list(self.rounds(policy, boundary=boundary))
+        self.flush()     # any per-round save() has fully landed on return
         return self.result_of(records)
 
     def result_of(self, records: List[RoundRecord]) -> FLResult:

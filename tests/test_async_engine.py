@@ -10,6 +10,7 @@ Everything the fault/buffer machinery adds is then tested *relative to that
 oracle*.
 """
 import dataclasses
+import types
 
 import jax
 import numpy as np
@@ -17,6 +18,7 @@ import pytest
 
 from repro.core.network import NetworkConfig
 from repro.fl import ENGINES, AsyncCohortEngine, Scenario, Simulation
+from repro.fl.async_engine import BufferedUpdate
 
 
 def _net(**kw):
@@ -167,6 +169,38 @@ def test_inflight_counts_match_telemetry():
     assert counts.sum() == recs[-1].inflight
 
 
+def test_reset_clears_engine_state_for_fair_sweeps():
+    """reset() must not leak in-flight/parked updates into the next run:
+    leftover arrivals carry old-clock timestamps and old versions, so a
+    swept second policy would aggregate the first policy's models. After
+    reset() the replay must match a fresh Simulation record-for-record."""
+    sc = _faulty(buffer_k=3)
+    sim = Simulation(sc)
+    for rec in sim.rounds("ddsra"):
+        if rec.inflight > 0 or rec.buffer_fill > 0:
+            break
+    assert sim.engine._pending or sim.engine._buffer
+    sim.reset()
+    assert not sim.engine._pending and not sim.engine._buffer
+    assert sim.engine._version == 0 and sim.engine._seq == 0
+    replay = list(sim.rounds("ddsra"))
+    fresh = list(Simulation(sc).rounds("ddsra"))
+    for a, b in zip(fresh, replay):
+        _assert_records_identical(a, b)
+
+
+def test_restart_clears_engine_state():
+    """restart() (what run() does first) rewinds the clock to 0, so it
+    must also drop whatever the previous rounds() left in flight."""
+    sim = Simulation(_faulty(buffer_k=3))
+    for rec in sim.rounds("ddsra"):
+        if rec.inflight > 0 or rec.buffer_fill > 0:
+            break
+    sim.restart()
+    assert not sim.engine._pending and not sim.engine._buffer
+    assert sim.engine._version == 0 and sim.engine._seq == 0
+
+
 def test_realized_queues_diverge_from_schedule_under_churn():
     """With heavy churn some selected gateway's update never lands, so the
     recorded queues must diverge from the scheduled Eq. (14) update — the
@@ -183,6 +217,56 @@ def test_realized_queues_diverge_from_schedule_under_churn():
             diverged = True
         prev = rec.queues
     assert diverged
+
+
+# ---------------------------------------------------------------------------
+# realized-delay accounting across under-full buffer rounds
+# ---------------------------------------------------------------------------
+
+
+def _engine_only_sim(max_staleness=None, staleness_alpha=0.5):
+    """The minimal stand-in _land_and_aggregate needs: scenario knobs plus
+    a writable ``params`` slot."""
+    return types.SimpleNamespace(
+        scenario=types.SimpleNamespace(max_staleness=max_staleness,
+                                       staleness_alpha=staleness_alpha),
+        params=None)
+
+
+def test_parked_straggler_charges_its_arrival_at_aggregation():
+    """An update landing into an under-full buffer is *parked*, not paid
+    for; when a later round's aggregation finally consumes it, the charged
+    delay must cover its arrival time — the server cannot aggregate at a
+    simulated time earlier than an aggregated update physically arrived."""
+    eng = AsyncCohortEngine()
+    model = {"w": np.ones(2)}
+    for arrival in (5.0, 100.0):        # 100.0 = the heavy straggler
+        eng._pending_push(BufferedUpdate(gateway=0, version=0,
+                                         arrival=arrival, seq=eng._seq,
+                                         weight=1.0, model=model))
+    sim = _engine_only_sim()
+    delay, agg, _, _ = eng._land_and_aggregate(sim, barrier=False,
+                                               buffer_k=3, now=0.0)
+    assert delay == 0.0 and not agg and len(eng._buffer) == 2
+
+    eng._pending_push(BufferedUpdate(gateway=1, version=0, arrival=3.0,
+                                     seq=eng._seq, weight=1.0, model=model))
+    delay, agg, _, _ = eng._land_and_aggregate(sim, barrier=False,
+                                               buffer_k=3, now=0.0)
+    assert len(agg) == 3
+    assert delay == 100.0               # not 3.0 (this round's only pop)
+
+
+def test_aggregation_delay_is_clamped_monotone():
+    """Arrivals earlier than ``now`` land free of charge: the aggregation
+    never rewinds the clock."""
+    eng = AsyncCohortEngine()
+    model = {"w": np.ones(2)}
+    eng._pending_push(BufferedUpdate(gateway=0, version=0, arrival=2.0,
+                                     seq=0, weight=1.0, model=model))
+    delay, agg, _, _ = eng._land_and_aggregate(
+        _engine_only_sim(), barrier=False, buffer_k=1, now=50.0)
+    assert len(agg) == 1 and delay == 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -243,6 +327,27 @@ def test_save_block_true_writes_inline(tmp_path):
     fname = sim.save(tmp_path, block=True)
     assert fname.exists()             # no flush needed
     assert Simulation.resume(tmp_path).t == 1
+
+
+def test_writer_drains_at_interpreter_exit_without_flush(tmp_path):
+    """A process that exits without ever calling flush() must not lose
+    queued checkpoints: the writer's atexit hook drains the queue (here
+    invoked directly — the interpreter runs it at shutdown)."""
+    sim = Simulation(_scenario(rounds=2))
+    next(sim.rounds("round_robin"))
+    fname = sim.save(tmp_path)
+    sim._ckpt_writer._drain_at_exit()
+    assert fname.exists()
+    assert Simulation.resume(tmp_path).t == 1
+
+
+def test_run_flushes_pending_saves(tmp_path):
+    """run() is a completion barrier for earlier non-blocking saves."""
+    sim = Simulation(_scenario(rounds=2))
+    next(sim.rounds("round_robin"))
+    fname = sim.save(tmp_path)
+    sim.run("round_robin")              # no explicit flush()
+    assert fname.exists()
 
 
 def test_flush_reraises_background_write_errors(tmp_path):
