@@ -32,12 +32,22 @@ fault axes instead of the machine: churn x straggler tail, comparing the
 async engine's synchronous-barrier mode against FedBuff-style buffering on
 *simulated* round delay and loss progress. Saves
 ``artifacts/benchmarks/fl_round_bench_churn.json``.
+
+Part four (``--fused`` / ``fused_sweep=True``) benches the fused simulation
+loop (``repro.fl.fused_sim``): steady-state rounds/sec of the stepwise
+``Simulation.rounds()`` loop vs ``fused_rounds()`` (one decide scan + one
+train scan) on the 20-device topology, asserting the fused path holds a
+>= 2x edge and that a whole run costs zero retraces once warm; then the
+seeds x V sweep farm (``Simulation.sweep()``), asserting the entire
+multi-seed multi-V grid is ONE compiled program across value changes.
+Saves ``artifacts/benchmarks/fl_round_bench_fused.json``.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, save_json, timed
+from repro.core import ddsra_jax
 from repro.core.network import NetworkConfig
 from repro.fl import Scenario, Simulation
 from repro.fl import cohort as cohort_lib
@@ -236,12 +246,123 @@ def churn_main(fast: bool = True) -> None:
     })
 
 
-def main(fast: bool = True, churn_sweep: bool = False) -> None:
+def fused_main(fast: bool = True) -> None:
+    """Fused simulation loop vs the stepwise round loop, plus the sweep farm.
+
+    Both paths run the identical trajectory (the parity matrix in
+    ``tests/test_fused_sim.py`` pins them bit-identical on queues/RNG), so
+    the rounds/sec ratio isolates the loop structure: per-round dispatch +
+    host repackaging vs one decide scan + one train scan. Compile counts
+    are asserted in-bench via the TRACE_COUNTS deltas: a warm fused run
+    retraces nothing, and the whole seeds x V sweep grid stays one
+    executable across value changes.
+
+    Workload: 20 devices (the paper topology's device count) spread over
+    10 gateways contending for 2 channels — the channel-scarce regime DDSRA
+    targets, and the one where the simulation loop itself (per-round decide
+    dispatch, decision repackaging, per-gateway loss syncs) is the cost
+    rather than raw training FLOPs. A narrow MLP + one local iteration
+    keeps per-round train compute at the few-ms scale of real edge rounds;
+    heavier models push both paths into compute-bound territory where the
+    loop structure (correctly) stops mattering. Steady-state = best of
+    ``REPS`` timed passes after a warm pass.
+    """
+    rounds = 30 if fast else 60
+    reps = 3
+    sc = Scenario(model="mlp", mlp_hidden=(32,), rounds=rounds,
+                  eval_every=rounds + 1, seed=0, alpha=0.03, k_iters=1,
+                  max_dataset=200, policy="ddsra_jax",
+                  net=NetworkConfig(n_gateways=10, n_devices=DEVICES,
+                                    n_channels=2))
+    sim = Simulation(sc)
+
+    # -- stepwise baseline: warm pass (compiles), then timed passes --------
+    recs = list(sim.rounds())
+    assert all(r.trained for r in recs), "degenerate bench: idle rounds"
+    step_s = []
+    for _ in range(reps):
+        sim.reset()
+        with timed() as t_step:
+            list(sim.rounds())
+        step_s.append(t_step["s"])
+    step_rps = rounds / min(step_s)
+
+    # -- fused: warm pass traces decide + train scans, timed passes retrace 0
+    sim.reset()
+    sim.fused_rounds()
+    before = {k: d[k] for d, k in [(ddsra_jax.TRACE_COUNTS, "decide"),
+                                   (ddsra_jax.TRACE_COUNTS, "round"),
+                                   (cohort_lib.TRACE_COUNTS, "train_scan"),
+                                   (cohort_lib.TRACE_COUNTS, "round")]}
+    fused_s = []
+    for _ in range(reps):
+        sim.reset()
+        with timed() as t_fused:
+            sim.fused_rounds()
+        fused_s.append(t_fused["s"])
+    retraces = sum(d[k] - before[k]
+                   for d, k in [(ddsra_jax.TRACE_COUNTS, "decide"),
+                                (ddsra_jax.TRACE_COUNTS, "round"),
+                                (cohort_lib.TRACE_COUNTS, "train_scan"),
+                                (cohort_lib.TRACE_COUNTS, "round")])
+    fused_rps = rounds / min(fused_s)
+    speedup = fused_rps / step_rps
+
+    emit("fl_fused_rounds_per_s", fused_rps,
+         f"stepwise={step_rps:.2f};speedup={speedup:.2f}x;"
+         f"retraces={retraces}")
+    print(f"  {rounds}-round/{DEVICES}-device run: stepwise "
+          f"{step_rps:.2f} rounds/s vs fused {fused_rps:.2f} rounds/s "
+          f"-> {speedup:.2f}x ({retraces} retraces on the warm run)")
+    assert retraces == 0, "warm fused run retraced a scan"
+    assert speedup >= 2.0, \
+        f"fused loop lost its >=2x rounds/sec edge ({speedup:.2f}x)"
+
+    # -- the sweep farm: seeds x V as ONE compiled program -----------------
+    seeds, v_values = [0, 1, 2], [0.01, 1.0, 100.0]
+    sweep_rounds = rounds
+    sim.sweep(v_values, seeds=seeds, rounds=sweep_rounds)        # warm
+    before_sweep = ddsra_jax.TRACE_COUNTS["sweep"]
+    with timed() as t_sweep:
+        res = sim.sweep([0.05, 5.0, 500.0], seeds=[3, 4, 5],
+                        rounds=sweep_rounds)
+    sweep_retraces = ddsra_jax.TRACE_COUNTS["sweep"] - before_sweep
+    lanes = len(seeds) * len(v_values)
+    lane_rps = lanes * sweep_rounds / t_sweep["s"]
+    emit("fl_sweep_lane_rounds_per_s", lane_rps,
+         f"lanes={lanes};rounds={sweep_rounds};"
+         f"retraces={sweep_retraces}")
+    print(f"  sweep farm: {lanes} (seed, V) lanes x {sweep_rounds} rounds "
+          f"in {t_sweep['s']:.2f}s ({lane_rps:.1f} lane-rounds/s), "
+          f"{sweep_retraces} retraces across value changes")
+    assert sweep_retraces == 0, \
+        "the seeds x V sweep stopped being one compiled program"
+    assert res.taus.shape == (3, 3, sweep_rounds)
+
+    save_json("fl_round_bench_fused", {
+        "rounds": rounds, "devices": DEVICES,
+        "gateways": sc.net.n_gateways, "channels": sc.net.n_channels,
+        "stepwise_rounds_per_s": step_rps,
+        "fused_rounds_per_s": fused_rps,
+        "fused_speedup": speedup,
+        "fused_retraces_warm": retraces,
+        "sweep_lanes": lanes, "sweep_rounds": sweep_rounds,
+        "sweep_s": t_sweep["s"],
+        "sweep_lane_rounds_per_s": lane_rps,
+        "sweep_retraces_across_value_changes": sweep_retraces,
+    })
+
+
+def main(fast: bool = True, churn_sweep: bool = False,
+         fused_sweep: bool = False) -> None:
     import jax
     jax.numpy.zeros(1).block_until_ready()   # generic runtime warmup
 
     if churn_sweep:
         churn_main(fast=fast)
+        return
+    if fused_sweep:
+        fused_main(fast=fast)
         return
 
     seq_stats_s, seq_run_s, seq_res = _simulate("sequential")

@@ -25,6 +25,8 @@ BENCHES = [
      "Cohort engine vs sequential FL round (speedup)"),
     ("fl_round_bench --churn", "fl_round_bench", {"churn_sweep": True},
      "churn/straggler sweep: sync barrier vs buffered async delay"),
+    ("fl_round_bench --fused", "fl_round_bench", {"fused_sweep": True},
+     "fused scan-the-round-loop vs stepwise rounds/sec + sweep farm"),
     ("scheduler_bench", "scheduler_bench", {},
      "DDSRA decide latency: numpy oracle vs jitted control plane"),
     ("theorem2_tradeoff", "theorem2_tradeoff", {},

@@ -38,6 +38,7 @@ feasibility test.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -50,12 +51,19 @@ from repro.core.ddsra import (GatewaySolution, RoundDecision, Workload, _PSI,
                               _cum)
 from repro.core.hungarian import assign_channels_jax
 from repro.core.lyapunov import update_queues_jax
-from repro.core.network import ChannelState, Network, draw_state_jax
+from repro.core.network import (ChannelState, ChannelStateT, Network,
+                                draw_state_jax)
 
 _BCD_ITERS = 4        # block-coordinate descent sweeps (oracle: bcd_iters)
 _PART_ITERS = 40      # bisection trips for (21), (22), (23)/(24)
 _FREQ_ITERS = 40
 _POW_ITERS = 60
+
+# Incremented inside the traced bodies (Python side effects run only at
+# trace time): "round" per stepwise round trace, "decide" per fused
+# decide-scan trace, "sweep" per seeds x V sweep trace. Tests assert exact
+# compile counts against these (tests/conftest.py ``compile_count``).
+TRACE_COUNTS = {"round": 0, "decide": 0, "sweep": 0}
 
 
 class _Cfg(NamedTuple):
@@ -93,14 +101,59 @@ class _Statics(NamedTuple):
     path: jnp.ndarray       # (M,) path-loss factor for the JAX channel draw
 
 
-class _St(NamedTuple):
-    """One round's ChannelState as a pytree of (M, J)/(N,)/(M,) arrays."""
-    h_up: jnp.ndarray
-    h_down: jnp.ndarray
-    i_up: jnp.ndarray
-    i_down: jnp.ndarray
-    e_dev: jnp.ndarray
-    e_gw: jnp.ndarray
+# One round's ChannelState as a pytree — shared with repro.core.network
+# (the fused-simulation contract; was a private _St twin here).
+_St = ChannelStateT
+
+
+class RoundContextT(NamedTuple):
+    """Traced twin of ``repro.core.schedulers.RoundContext``: the per-round
+    scheduling inputs as a pytree, so a whole trajectory of contexts is one
+    stacked pytree a ``lax.scan`` can thread. Only the tensors the traced
+    DDSRA round actually reads are carried — the host RoundContext's object
+    references (net, workload) live in :class:`_Statics` instead."""
+    queues: jnp.ndarray        # (M,) virtual-queue backlog Q_m(t)
+    gamma_rates: jnp.ndarray   # (M,) participation-rate targets
+    v: jnp.ndarray             # scalar Lyapunov trade-off weight
+
+
+class DecisionArrays(NamedTuple):
+    """Raw per-round DDSRA solver outputs as a typed pytree (was an untyped
+    dict): everything Algorithm 1 decides, padded-dense over (M, J[, n_max])
+    so rounds stack/scan without shape games. ``repro.fl.fused_sim`` threads
+    these straight into the fused training round without leaving the device;
+    :meth:`DDSRAPlan.round` repackages them as the oracle's
+    :class:`RoundDecision` for the stepwise host path."""
+    feasible: jnp.ndarray      # (M, J) bool
+    lam: jnp.ndarray           # (M, J) round delay Lambda_{m,j} (inf = infeasible)
+    l: jnp.ndarray             # (M, J, n_max) partition points
+    f_gw: jnp.ndarray          # (M, J, n_max) gateway frequency split
+    p_tx: jnp.ndarray          # (M, J) transmit power
+    e_dev: jnp.ndarray         # (M, J, n_max) device energy used
+    e_gw: jnp.ndarray          # (M, J) gateway energy used
+    eye: jnp.ndarray           # (M, J) channel assignment indicator
+    selected: jnp.ndarray      # (M,) bool participation
+    tau: jnp.ndarray           # scalar round delay
+    queues: jnp.ndarray        # (M,) post-update queues (Eq. 14)
+
+
+class RoundDecisionT(NamedTuple):
+    """Pytree-typed :class:`repro.core.ddsra.RoundDecision`: the *resolved*
+    schedule in the exact form the fused training round consumes — per-device
+    partition points scattered out of the padded (M, J, n_max) lanes, the
+    trained mask with infeasible selections already failed out, and the
+    realized delay. Produced traced by :func:`resolve_decision_arrays`
+    (inside the fused scan) and host-side by
+    ``repro.fl.sim.resolve_decision`` (the stepwise loop); the parity
+    matrix pins the two bit-identical."""
+    selected: jnp.ndarray      # (M,) bool scheduled participation
+    trained: jnp.ndarray       # (M,) bool actually-training gateways
+    l_dev: jnp.ndarray         # (N,) per-device partition points
+    gw_delay: jnp.ndarray      # (M,) per-gateway delay (0 where not trained)
+    delay: jnp.ndarray         # scalar realized round delay (max over trained)
+    tau: jnp.ndarray           # scalar scheduler-reported round delay
+    failures: jnp.ndarray      # scalar count of infeasible selections
+    queues: jnp.ndarray        # (M,) post-update queues
 
 
 # ---------------------------------------------------------------------------
@@ -359,8 +412,10 @@ def _assignment(lam, queues, v):
 # ---------------------------------------------------------------------------
 
 
-def _round(s: _Statics, st: _St, queues, gamma_rates, v):
+def _round(s: _Statics, st: ChannelStateT, ctx: RoundContextT
+           ) -> DecisionArrays:
     """One whole DDSRA round as a single traced computation."""
+    TRACE_COUNTS["round"] += 1
     e_dev_pad = jnp.where(s.valid, st.e_dev[s.dev_idx], jnp.inf)
 
     solve = _solve_gateway
@@ -372,14 +427,88 @@ def _round(s: _Statics, st: _St, queues, gamma_rates, v):
         s, s.kd, s.f_dev, s.valid, s.n_loc, e_dev_pad, st.e_gw,
         st.h_up, st.h_down, st.i_up, st.i_down)
 
-    eye, selected, tau = _assignment(lam, queues, v)
-    new_q = update_queues_jax(queues, selected, gamma_rates)    # Eq. (14)
-    return dict(feasible=feas, lam=lam, l=l, f_gw=f_gw, p_tx=p_tx,
-                e_dev=e_dev_used, e_gw=e_gw_used, eye=eye,
-                selected=selected, tau=tau, queues=new_q)
+    eye, selected, tau = _assignment(lam, ctx.queues, ctx.v)
+    # Eq. (14)
+    new_q = update_queues_jax(ctx.queues, selected, ctx.gamma_rates)
+    return DecisionArrays(feasible=feas, lam=lam, l=l, f_gw=f_gw, p_tx=p_tx,
+                          e_dev=e_dev_used, e_gw=e_gw_used, eye=eye,
+                          selected=selected, tau=tau, queues=new_q)
 
 
 _round_jit = jax.jit(_round)
+
+
+def resolve_decision_arrays(s: _Statics, out: DecisionArrays,
+                            n_devices: int) -> RoundDecisionT:
+    """Resolve raw solver outputs into the engine-facing
+    :class:`RoundDecisionT` — the traced twin of
+    ``repro.fl.sim.resolve_decision`` (same semantics, array form):
+
+    * each selected gateway's assigned channel is the argmax of its ``eye``
+      row (exactly one 1 when selected);
+    * a selection whose solve is infeasible (or non-finite delay) *fails*
+      instead of training — counted in ``failures``;
+    * the per-lane partition points of trained gateways scatter into the
+      dense (N,) ``l_dev`` vector (padded lanes carry ``dev_idx=0`` but
+      scatter exact zeros, so they never corrupt device 0);
+    * the realized round delay is the max over trained gateways (the FedAvg
+      barrier), 0 when nobody trains.
+    """
+    m_idx = jnp.arange(out.eye.shape[0])
+    j_star = jnp.argmax(out.eye, axis=1)                    # (M,)
+    lam_sel = out.lam[m_idx, j_star]
+    feas_sel = out.feasible[m_idx, j_star]
+    trained = out.selected & feas_sel & jnp.isfinite(lam_sel)
+    failures = jnp.sum(out.selected & ~trained)
+    l_sel = out.l[m_idx, j_star]                            # (M, n_max)
+    vals = jnp.where(s.valid & trained[:, None], l_sel, 0)
+    l_dev = jnp.zeros((n_devices,), out.l.dtype).at[
+        s.dev_idx.ravel()].add(vals.ravel())
+    gw_delay = jnp.where(trained, lam_sel, 0.0)
+    delay = jnp.where(trained.any(),
+                      jnp.max(jnp.where(trained, lam_sel, -jnp.inf)), 0.0)
+    return RoundDecisionT(selected=out.selected, trained=trained,
+                          l_dev=l_dev, gw_delay=gw_delay, delay=delay,
+                          tau=out.tau, failures=failures, queues=out.queues)
+
+
+@functools.partial(jax.jit, static_argnames=("n_devices",))
+def _decide_scan(s: _Statics, states: ChannelStateT, ctx0: RoundContextT,
+                 *, n_devices: int):
+    """Whole decide trajectory as one program: ``lax.scan`` the traced
+    DDSRA round over stacked channel states, threading only the queue
+    vector. Returns the stacked :class:`RoundDecisionT` (leading round
+    axis) plus the stacked raw :class:`DecisionArrays` queues trajectory's
+    final value via the decisions themselves."""
+    TRACE_COUNTS["decide"] += 1
+
+    def step(queues, st):
+        out = _round(s, st, ctx0._replace(queues=queues))
+        return out.queues, resolve_decision_arrays(s, out, n_devices)
+
+    _, decisions = lax.scan(step, ctx0.queues, states)
+    return decisions
+
+
+@jax.jit
+def _sweep_scan(s: _Statics, states: ChannelStateT, ctx0: RoundContextT,
+                v_values):
+    """seeds x V sweep as one program: ``vmap`` over the seed axis of the
+    stacked states (leaves (S, T, ...)), ``vmap`` over V (all lanes share a
+    seed's channel draws — the fair-sweep contract), ``lax.scan`` over
+    rounds. Returns (taus, selected, queues) with leading (S, V, T) axes."""
+    TRACE_COUNTS["sweep"] += 1
+
+    def run_v(states_1seed, v):
+        def step(queues, st):
+            out = _round(s, st, ctx0._replace(queues=queues, v=v))
+            return out.queues, (out.tau, out.selected, out.queues)
+        _, ys = lax.scan(step, ctx0.queues, states_1seed)
+        return ys
+
+    per_seed = jax.vmap(lambda st1: jax.vmap(
+        lambda v: run_v(st1, v))(v_values))
+    return per_seed(states)
 
 
 @dataclasses.dataclass
@@ -435,31 +564,33 @@ class DDSRAPlan:
 
     # -- one oracle-parity round ----------------------------------------
 
-    def round_arrays(self, st: ChannelState, queues, gamma_rates, v):
+    def _ctx(self, queues, gamma_rates, v) -> RoundContextT:
+        """Host values -> the x64 traced context pytree."""
+        return RoundContextT(
+            queues=jnp.asarray(np.asarray(queues, np.float64)),
+            gamma_rates=jnp.asarray(np.asarray(gamma_rates, np.float64)),
+            v=jnp.asarray(float(v)))
+
+    def round_arrays(self, st: ChannelState, queues, gamma_rates, v
+                     ) -> DecisionArrays:
         """Run the jitted round on a host-drawn ChannelState; returns the
-        raw output dict of device arrays (x64)."""
+        raw :class:`DecisionArrays` pytree of device arrays (x64)."""
         with enable_x64():
-            st_j = _St(*[jnp.asarray(np.asarray(a, np.float64)) for a in
-                         (st.h_up, st.h_down, st.i_up, st.i_down,
-                          st.e_dev, st.e_gw)])
-            return _round_jit(self.statics, st_j,
-                              jnp.asarray(np.asarray(queues, np.float64)),
-                              jnp.asarray(np.asarray(gamma_rates,
-                                                     np.float64)),
-                              jnp.asarray(float(v)))
+            return _round_jit(self.statics, ChannelStateT.of(st),
+                              self._ctx(queues, gamma_rates, v))
 
     def round(self, st: ChannelState, queues, gamma_rates, v
               ) -> RoundDecision:
         """Oracle-compatible round: jitted solve + host repackaging."""
         out = self.round_arrays(st, queues, gamma_rates, v)
-        eye = np.asarray(out["eye"])
-        lam = np.asarray(out["lam"])
-        feas = np.asarray(out["feasible"])
-        l = np.asarray(out["l"])
-        f_gw = np.asarray(out["f_gw"])
-        p_tx = np.asarray(out["p_tx"])
-        e_dev = np.asarray(out["e_dev"])
-        e_gw = np.asarray(out["e_gw"])
+        eye = np.asarray(out.eye)
+        lam = np.asarray(out.lam)
+        feas = np.asarray(out.feasible)
+        l = np.asarray(out.l)
+        f_gw = np.asarray(out.f_gw)
+        p_tx = np.asarray(out.p_tx)
+        e_dev = np.asarray(out.e_dev)
+        e_gw = np.asarray(out.e_gw)
         sols = {}
         for m, j in zip(*np.nonzero(eye > 0)):
             n = int(self.n_loc_host[m])
@@ -469,7 +600,47 @@ class DDSRAPlan:
                 float(p_tx[m, j]), e_dev[m, j, :n], float(e_gw[m, j]))
         selected = eye.sum(axis=1) > 0
         return RoundDecision(eye, selected, lam, sols,
-                             float(out["tau"]), np.asarray(out["queues"]))
+                             float(out.tau), np.asarray(out.queues))
+
+    # -- fused decide trajectories (repro.fl.fused_sim) ------------------
+
+    def decide_scan(self, states: ChannelStateT, queues, gamma_rates, v
+                    ) -> RoundDecisionT:
+        """Run the whole decide trajectory as one compiled program.
+
+        ``states`` is a stacked :class:`ChannelStateT` (leading round axis,
+        host-drawn so the numpy channel stream is preserved); returns the
+        stacked resolved :class:`RoundDecisionT` with every leaf carrying a
+        leading ``(rounds,)`` axis. One compile per (topology, rounds)
+        shape; re-running with different values never retraces.
+        """
+        with enable_x64():
+            states = jax.tree.map(
+                lambda a: jnp.asarray(np.asarray(a, np.float64)), states)
+            return _decide_scan(self.statics, states,
+                                self._ctx(queues, gamma_rates, v),
+                                n_devices=self.n_devices)
+
+    def sweep_states(self, states: ChannelStateT, gamma_rates, v_values,
+                     queues=None):
+        """seeds x V sweep over host-drawn channel trajectories as one
+        compiled program.
+
+        ``states`` leaves carry leading (seeds, rounds) axes (stack
+        ``repro.core.network.stack_states`` per seed, then ``np.stack``
+        over seeds). All V lanes of a seed share its channel draws — the
+        PR 2 fair-sweep contract — so the trade-off curves isolate V.
+        Returns numpy (taus, selected, queues) shaped
+        (seeds, len(v_values), rounds[, M]).
+        """
+        with enable_x64():
+            states = jax.tree.map(
+                lambda a: jnp.asarray(np.asarray(a, np.float64)), states)
+            q0 = np.zeros(self.n_gateways) if queues is None else queues
+            taus, sel, qs = _sweep_scan(
+                self.statics, states, self._ctx(q0, gamma_rates, 0.0),
+                jnp.asarray(np.asarray(v_values, np.float64)))
+            return np.asarray(taus), np.asarray(sel), np.asarray(qs)
 
     # -- fully-fused sweeps (device-resident rounds) ---------------------
 
@@ -489,12 +660,12 @@ class DDSRAPlan:
 
             def one_round(q, key, v):
                 c = s.cfg
-                st = _St(*draw_state_jax(
+                st = ChannelStateT(*draw_state_jax(
                     key, s.path, j_ch, n_dev,
                     e_dev_max=c.e_dev_max, e_gw_max=c.e_gw_max,
                     i_up_var=c.i_up_var, i_down_var=c.i_down_var))
-                out = _round(s, st, q, gamma_rates, v)
-                return out["queues"], (out["tau"], out["selected"])
+                out = _round(s, st, RoundContextT(q, gamma_rates, v))
+                return out.queues, (out.tau, out.selected)
 
             def run_v(v):
                 def step(q, key):

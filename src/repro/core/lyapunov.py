@@ -4,6 +4,14 @@
 scheduler; ``update_queues_jax`` is its traced twin, used inside the
 jitted DDSRA round (``repro.core.ddsra_jax``) so the queue recursion can
 stay device-resident across a whole ``lax.scan``-ed run.
+
+Queue contract for the fused simulation loop (``repro.fl.fused_sim``): the
+(M,) float64 queue vector is the *only* state threaded between scheduling
+rounds, carried as the ``queues`` leaf of the pytree-typed decision
+(``repro.core.ddsra_jax.RoundDecisionT``). Both updates implement the same
+Eq. (14) recursion, so a ``lax.scan`` over :func:`update_queues_jax` is
+bit-identical (on the same backend) to the stepwise numpy loop — the
+cross-engine parity matrix in ``tests/test_fused_sim.py`` pins this.
 """
 from __future__ import annotations
 

@@ -10,7 +10,7 @@ device-resident.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -60,6 +60,41 @@ class ChannelState:
     i_down: np.ndarray     # (M, J)
     e_dev: np.ndarray      # (N,) energy arrivals
     e_gw: np.ndarray       # (M,)
+
+
+class ChannelStateT(NamedTuple):
+    """:class:`ChannelState` as a traced pytree (the fused-simulation
+    contract shared with ``repro.core.ddsra_jax`` and ``repro.fl.fused_sim``).
+
+    Same six leaves as the dataclass; being a NamedTuple makes it a JAX
+    pytree, so whole trajectories stack into leaves with leading
+    ``(rounds,)`` / ``(seeds, rounds)`` axes and feed ``lax.scan`` /
+    ``vmap`` directly (see :func:`stack_states`).
+    """
+    h_up: np.ndarray       # (..., M, J)
+    h_down: np.ndarray     # (..., M, J)
+    i_up: np.ndarray       # (..., M, J)
+    i_down: np.ndarray     # (..., M, J)
+    e_dev: np.ndarray      # (..., N)
+    e_gw: np.ndarray       # (..., M)
+
+    @classmethod
+    def of(cls, st: "ChannelState", dtype=np.float64) -> "ChannelStateT":
+        """Lift one host-drawn :class:`ChannelState` into the pytree form
+        (x64 by default — the control plane's precision contract)."""
+        return cls(*[np.asarray(getattr(st, f), dtype) for f in cls._fields])
+
+
+def stack_states(states: Sequence["ChannelState"],
+                 dtype=np.float64) -> ChannelStateT:
+    """Stack host-drawn :class:`ChannelState` draws into one
+    :class:`ChannelStateT` with a leading round axis — the ``xs`` a fused
+    round loop scans over. Stacking nests: ``stack_states`` per seed, then
+    ``jax.tree.map(np.stack, ...)`` over seeds, gives (S, T, ...) leaves
+    for the seeds x V sweep."""
+    return ChannelStateT(*[
+        np.stack([np.asarray(getattr(s, f), dtype) for s in states])
+        for f in ChannelStateT._fields])
 
 
 class Network:
@@ -124,8 +159,8 @@ def draw_state_jax(key, path, n_channels: int, n_devices: int, *,
     fading on the path-loss factor, folded-normal interference, uniform
     energy arrivals), traced so a scheduling round can consume the draw
     without leaving device memory. ``path`` is the (M,) per-gateway
-    path-loss factor ``h0 * (d0 / dist)^nu``. Returns the six ChannelState
-    arrays as a tuple (h_up, h_down, i_up, i_down, e_dev, e_gw).
+    path-loss factor ``h0 * (d0 / dist)^nu``. Returns a
+    :class:`ChannelStateT` (h_up, h_down, i_up, i_down, e_dev, e_gw).
 
     The stream differs from the numpy generator's, so this is for fully
     fused sweeps (e.g. the vmapped V sweep), not oracle-parity runs.
@@ -142,4 +177,4 @@ def draw_state_jax(key, path, n_channels: int, n_devices: int, *,
     i_down = jnp.abs(jax.random.normal(k[3], shape) * jnp.sqrt(i_down_var))
     e_dev = jax.random.uniform(k[4], (n_devices,)) * e_dev_max
     e_gw = jax.random.uniform(k[5], (m_gw,)) * e_gw_max
-    return h_up, h_down, i_up, i_down, e_dev, e_gw
+    return ChannelStateT(h_up, h_down, i_up, i_down, e_dev, e_gw)

@@ -6,6 +6,16 @@ fix the partition point, transmit power and frequency split ("the baseline
 schemes fix the transmit power, computation frequency and the DNN partition
 point", Sec. VII-C); a baseline round *fails* for a gateway whose fixed
 resources violate the energy/memory constraints.
+
+Two class-level flags tell the fused simulation loop
+(``repro.fl.fused_sim``) what a policy can do:
+
+* ``traced_decide`` — the policy's whole decide trajectory can run as one
+  compiled ``lax.scan`` (only ``ddsra_jax``); other policies decide via a
+  host loop in the fused path, which is still exact.
+* ``reads_losses`` — the policy's decisions depend on training feedback
+  (``ctx.losses``), so decide and train cannot be phase-separated; the
+  fused path refuses such policies (only ``loss_driven``).
 """
 from __future__ import annotations
 
@@ -186,23 +196,28 @@ class DDSRAJaxScheduler:
     and tau to ~1e-6 — while compiling exactly once per network shape.
     """
 
+    # the decide trajectory is traceable end-to-end: the fused simulation
+    # loop scans DDSRAPlan's round instead of calling schedule() per round.
+    traced_decide = True
+
     def __init__(self):
         self._plans: Dict[int, Tuple[Any, Any, Any]] = {}
 
-    def _plan(self, ctx: RoundContext):
+    def plan_for(self, workload, net):
         """One DDSRAPlan per (net, workload) pair, keyed by identity (both
-        are built once per Simulation and reused across rounds)."""
+        are built once per Simulation and reused across rounds). The fused
+        loop calls this directly to reach ``decide_scan``/``sweep_states``."""
         from repro.core.ddsra_jax import DDSRAPlan
-        key = (id(ctx.net), id(ctx.workload))
+        key = (id(net), id(workload))
         hit = self._plans.get(key)
-        if hit is None or hit[0] is not ctx.net or hit[1] is not ctx.workload:
-            self._plans[key] = (ctx.net, ctx.workload,
-                                DDSRAPlan.build(ctx.workload, ctx.net))
+        if hit is None or hit[0] is not net or hit[1] is not workload:
+            self._plans[key] = (net, workload,
+                                DDSRAPlan.build(workload, net))
         return self._plans[key][2]
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
-        return self._plan(ctx).round(ctx.state, ctx.queues,
-                                     ctx.gamma_rates, ctx.v)
+        return self.plan_for(ctx.workload, ctx.net).round(
+            ctx.state, ctx.queues, ctx.gamma_rates, ctx.v)
 
 
 @register_policy("random", kwargs=("seed",))
@@ -232,6 +247,10 @@ class RoundRobinScheduler:
 @register_policy("loss_driven")
 class LossDrivenScheduler:
     """Select the J gateways with the largest recent local loss."""
+
+    # decisions depend on training feedback: decide/train cannot be
+    # phase-separated, so the fused simulation loop refuses this policy.
+    reads_losses = True
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
         m, j = ctx.net.cfg.n_gateways, ctx.net.cfg.n_channels

@@ -13,6 +13,10 @@ Public surface (see ``README.md`` in this directory and
 * Fault axes — ``FaultModel`` / ``draw_round_faults`` (``repro.fl.faults``):
   churn, mid-round dropout and straggler tails drawn from the network RNG
   stream, honored by the async engine.
+* Fused simulation loop — ``RoundTelemetry`` / ``SweepResult``
+  (``repro.fl.fused_sim``): the whole simulate → decide → train loop as
+  compiled scans behind ``Simulation.fused_rounds()`` /
+  ``Simulation.sweep()``.
 * Packing contract — ``sample_cohort_batch`` + ``CohortLayout`` /
   ``TieredCohortBatch`` (tiered slot widths) in ``repro.fl.data``.
 * ``FLTrainer`` / ``FLConfig`` — deprecated shim over ``Simulation``.
@@ -25,6 +29,7 @@ from repro.fl.sim import (ENGINES, CohortEngine, Engine, FLResult,
                           RoundRecord, Scenario, SequentialEngine, Simulation,
                           make_engine, register_engine)
 from repro.fl.async_engine import AsyncCohortEngine
+from repro.fl.fused_sim import RoundTelemetry, SweepResult
 from repro.fl.shard import ShardedCohortEngine
 from repro.fl.trainer import FLConfig, FLTrainer
 
@@ -33,5 +38,5 @@ __all__ = ["CohortBatch", "CohortLayout", "TieredCohortBatch", "FLDataset",
            "FLConfig", "FLResult", "FLTrainer", "Scenario", "Simulation",
            "RoundRecord", "Engine", "CohortEngine", "SequentialEngine",
            "ShardedCohortEngine", "AsyncCohortEngine", "FaultModel",
-           "RoundFaults", "draw_round_faults", "ENGINES", "make_engine",
-           "register_engine"]
+           "RoundFaults", "draw_round_faults", "RoundTelemetry",
+           "SweepResult", "ENGINES", "make_engine", "register_engine"]

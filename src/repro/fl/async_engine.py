@@ -82,6 +82,7 @@ class AsyncCohortEngine(CohortEngine):
     """
 
     supports_faults = True
+    supports_fused = False   # buffered aggregation is stateful across rounds
 
     def __init__(self):
         # (arrival, seq, BufferedUpdate) min-heap: dispatched, not yet landed
@@ -89,6 +90,17 @@ class AsyncCohortEngine(CohortEngine):
         self._buffer: List[BufferedUpdate] = []   # landed, not yet aggregated
         self._version = 0                         # completed aggregations
         self._seq = 0                             # dispatch counter (ties)
+
+    def fused_train(self, sim, params, losses0, xs, ys, masks, ls, ws, gws,
+                    trained):
+        """Refuse the fused scan path (inherited from CohortEngine): the
+        buffered aggregation's cross-round state — the in-flight heap,
+        staleness buffer and realized-arrival clock — cannot be carried
+        through a synchronous per-round scan; a fused run would silently
+        replay barrier semantics and falsify the staleness telemetry."""
+        raise NotImplementedError(
+            "engine 'async' has no fused scan path (buffered aggregation "
+            "is stateful across rounds); use Simulation.rounds()")
 
     def reset(self, sim) -> None:
         """Drop every in-flight and parked update and rewind the counters.

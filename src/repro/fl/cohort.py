@@ -57,7 +57,9 @@ from repro.models.vgg import Params, Plan
 
 # Incremented inside the traced bodies (Python side effects run only at trace
 # time), so tests/benchmarks can assert "exactly one compile across rounds".
-TRACE_COUNTS = {"round": 0, "stats": 0}
+# "round"/"stats" count per-round program traces; "train_scan" counts traces
+# of the whole-run fused training loop (repro.fl.fused_sim).
+TRACE_COUNTS = {"round": 0, "stats": 0, "train_scan": 0}
 
 
 def _unflatten_stacked(flat_nd: jnp.ndarray, like):
@@ -202,13 +204,15 @@ def _batch_tiers(batch):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("plan", "k_iters", "with_boundary",
-                                    "with_gateway_models", "compute_dtype"))
-def _cohort_round(plan: Plan, params: Params, xs, ys, masks, l_n, weights,
-                  gw_onehot, lr, *, k_iters: int, with_boundary: bool,
-                  with_gateway_models: bool = False,
-                  compute_dtype: str = "f32"):
+def cohort_round_traced(plan: Plan, params: Params, xs, ys, masks, l_n,
+                        weights, gw_onehot, lr, *, k_iters: int,
+                        with_boundary: bool,
+                        with_gateway_models: bool = False,
+                        compute_dtype: str = "f32"):
+    """The fused round as a plain traced function: the body behind the
+    per-round jit below, *and* the scan step of the whole-run fused
+    training loop (:func:`train_scan` / ``repro.fl.fused_sim``) — one
+    implementation, two compilation granularities."""
     TRACE_COUNTS["round"] += 1
     xs = _maybe_flatten(plan, xs)
     sizes = tuple(x.shape[0] for x in xs)
@@ -243,6 +247,62 @@ def _cohort_round(plan: Plan, params: Params, xs, ys, masks, l_n, weights,
         gw_models = None
 
     return new_global, gw_loss, gw_count, dev_losses, boundary, gw_models
+
+
+_cohort_round = functools.partial(
+    jax.jit, static_argnames=("plan", "k_iters", "with_boundary",
+                              "with_gateway_models", "compute_dtype")
+)(cohort_round_traced)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "k_iters", "compute_dtype"))
+def train_scan(plan: Plan, params: Params, losses0, xs, ys, masks, ls, ws,
+               gws, trained, lr, *, k_iters: int,
+               compute_dtype: str = "f32"):
+    """The whole training run as ONE program: ``lax.scan`` of the fused
+    round over stacked per-round inputs.
+
+    ``xs/ys/masks/ls/ws/gws`` are per-tier tuples with a leading round
+    axis — tier k: ``(T, S_k, ...)`` — and ``trained`` is the (T, M) bool
+    trained-gateway mask (the same per-tier structure the sharded twin,
+    ``repro.fl.shard._train_scan_program``, shards over the mesh). The
+    carry is (global params, per-gateway losses); each trip runs
+    :func:`cohort_round_traced` on that round's pre-packed batch + decision
+    tensors (``repro.fl.fused_sim`` threads them straight from the traced
+    DDSRA decide scan). Two guards keep the scan equal to the stepwise
+    loop round-for-round:
+
+    * an all-zero-weight round (nobody trained) keeps the old params — the
+      per-round path simply skips the program, while the normalized FedAvg
+      here would otherwise average into zeros;
+    * per-gateway losses update only where ``trained`` is set, mirroring
+      ``sim.losses[m] = gw_loss[m]`` for trained gateways only.
+
+    Returns (final params, final losses (M,), per-round loss history
+    (T, M) f32). One compile per (topology, rounds) shape.
+    """
+    TRACE_COUNTS["train_scan"] += 1
+
+    def step(carry, x):
+        params, losses = carry
+        xs_t, ys_t, masks_t, l_t, w_t, gw_t, tr_t = x
+        w = jnp.concatenate(w_t)
+        new_global, gw_loss, _, _, _, _ = cohort_round_traced(
+            plan, params, xs_t, ys_t, masks_t, jnp.concatenate(l_t), w,
+            jnp.concatenate(gw_t), lr, k_iters=k_iters,
+            with_boundary=False, compute_dtype=compute_dtype)
+        any_trained = jnp.sum(w) > 0
+        params = jax.tree.map(
+            lambda new, old: jnp.where(any_trained, new, old),
+            new_global, params)
+        losses = jnp.where(tr_t, gw_loss, losses)
+        return (params, losses), losses
+
+    (params, losses), loss_hist = jax.lax.scan(
+        step, (params, jnp.asarray(losses0, jnp.float32)),
+        (xs, ys, masks, ls, ws, gws, trained))
+    return params, losses, loss_hist
 
 
 def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,

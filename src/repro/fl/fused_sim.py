@@ -1,0 +1,409 @@
+"""Whole-simulation fusion: the round loop as compiled scans.
+
+The stepwise :meth:`repro.fl.sim.Simulation.rounds` loop crosses the host
+every round — repackage the jitted DDSRA solve into a
+:class:`~repro.core.ddsra.RoundDecision`, resolve it in Python, launch one
+fused training program, sync the loss. This module runs the same
+simulate → decide → train trajectory as (up to) two compiled programs plus
+one host replay pass:
+
+* **Fused decide** — for traced policies (``ddsra_jax``) the whole decide
+  trajectory is ONE program: ``lax.scan`` of the traced DDSRA round over
+  the stacked channel states
+  (:meth:`repro.core.ddsra_jax.DDSRAPlan.decide_scan`), resolving each
+  round's :class:`~repro.core.ddsra_jax.DecisionArrays` into the
+  pytree-typed :class:`~repro.core.ddsra_jax.RoundDecisionT` *inside* the
+  scan. Host policies (round_robin, random, the numpy oracle) decide via a
+  host loop instead — still exact, just not fused.
+* **Batch replay** — :meth:`CohortEngine._pack_round` runs per round on the
+  host, consuming ``sim.rng`` with exactly the draws the stepwise loop
+  would make (the packing contract), so the fused path is RNG-bit-identical
+  to stepwise. The packed per-round tensors stack into per-tier arrays
+  with a leading round axis.
+* **Fused train** — ONE program scans the fused cohort round over all
+  rounds (``repro.fl.cohort.train_scan``; the sharded engine's twin wraps
+  the scan in ``shard_map``), threading (params, losses) as the carry and
+  the stacked decision tensors straight from the decide scan. The
+  precision contract survives inside the pipeline: the decide program runs
+  x64 (``jax.experimental.enable_x64``), the train program f32/bf16.
+
+Why decide and train can be phase-separated at all: every fusable policy's
+decisions depend only on channel draws and the queue recursion — never on
+training outputs. The one feedback-coupled policy (``loss_driven``,
+``reads_losses = True``) is refused. Channel streams stay exact because
+states are pre-drawn host-side from the same ``net.rng`` before the batch
+replay touches ``sim.rng`` — two independent generators, each consumed in
+stepwise order.
+
+Telemetry crosses back to the host once, after the scans, as a stacked
+:class:`RoundTelemetry` pytree (one leaf per :class:`RoundRecord` field,
+leading round axis) and is streamed into the familiar per-round records by
+:meth:`RoundTelemetry.to_records`. Parity with the stepwise loop —
+bit-identical queues and RNG streams, params at 1e-5 — is pinned across
+{cohort, sharded} x {ddsra_jax, round_robin} x {f32, bf16} in
+``tests/test_fused_sim.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.network import ChannelState, stack_states
+from repro.core.schedulers import RoundContext
+from repro.fl.sim import (RoundRecord, Simulation, resolve_decision)
+from repro.models import vgg
+
+
+class RoundTelemetry(NamedTuple):
+    """Stacked per-round telemetry as a pytree: one leaf per (array-like)
+    :class:`~repro.fl.sim.RoundRecord` field, every leaf carrying a leading
+    ``(rounds,)`` axis.
+
+    This is the side-channel the fused loop streams telemetry through:
+    scan outputs land here as stacked device arrays, cross the host
+    boundary once, and fan back out into per-round records via
+    :meth:`to_records`. ``boundary_rms`` and ``accuracy`` are not leaves —
+    they are optional per-round host artifacts (``None`` inside the fused
+    loop) and would force ragged shapes.
+
+    ``flatten -> unflatten`` is the identity (NamedTuples are JAX pytrees)
+    and :meth:`from_records` / :meth:`to_records` round-trip exactly —
+    both pinned by the Hypothesis property test in
+    ``tests/test_fused_sim.py``.
+    """
+    t: np.ndarray                  # (T,) int
+    selected: np.ndarray           # (T, M) bool
+    trained: np.ndarray            # (T, M) bool (records carry id lists)
+    l_n: np.ndarray                # (T, N) int
+    delay: np.ndarray              # (T,) float64
+    cum_delay: np.ndarray          # (T,) float64
+    queues: np.ndarray             # (T, M) float64
+    losses: np.ndarray             # (T, M) float64
+    failures: np.ndarray           # (T,) int
+    aggregations: np.ndarray       # (T,) int
+    staleness_mean: np.ndarray     # (T,) float64 (0.0 when no aggregation)
+    staleness_max: np.ndarray      # (T,) int
+    stale_discarded: np.ndarray    # (T,) int
+    dropped_devices: np.ndarray    # (T,) int
+    lost_devices: np.ndarray       # (T,) int
+    straggler_devices: np.ndarray  # (T,) int
+    buffer_fill: np.ndarray        # (T,) int
+    inflight: np.ndarray           # (T,) int
+
+    @classmethod
+    def from_records(cls, records: Sequence[RoundRecord]
+                     ) -> "RoundTelemetry":
+        """Stack per-round records into one pytree (trained id lists become
+        the (T, M) bool mask; ``boundary_rms``/``accuracy`` are dropped)."""
+        m_gw = len(records[0].queues)
+        trained = np.zeros((len(records), m_gw), bool)
+        for i, r in enumerate(records):
+            trained[i, list(r.trained)] = True
+        pick = {
+            "t": (int, None), "selected": (bool, None),
+            "l_n": (int, None), "delay": (np.float64, None),
+            "cum_delay": (np.float64, None), "queues": (np.float64, None),
+            "losses": (np.float64, None), "failures": (int, None),
+            "aggregations": (int, None),
+            "staleness_mean": (np.float64, None), "staleness_max": (int, None),
+            "stale_discarded": (int, None), "dropped_devices": (int, None),
+            "lost_devices": (int, None), "straggler_devices": (int, None),
+            "buffer_fill": (int, None), "inflight": (int, None)}
+        cols = {k: np.asarray([getattr(r, k) for r in records], dtype=dt)
+                for k, (dt, _) in pick.items()}
+        return cls(trained=trained, **cols)
+
+    def to_records(self) -> List[RoundRecord]:
+        """Fan the stacked leaves back out into per-round records (host
+        streaming after the scan). Every value is concretized to host
+        numpy/Python — a traced leaf here would be a leak, which the
+        property test rejects."""
+        out = []
+        for i in range(len(np.asarray(self.t))):
+            out.append(RoundRecord(
+                t=int(self.t[i]),
+                selected=np.asarray(self.selected[i]).copy(),
+                trained=[int(m) for m in np.where(self.trained[i])[0]],
+                l_n=np.asarray(self.l_n[i]).copy(),
+                delay=float(self.delay[i]),
+                cum_delay=float(self.cum_delay[i]),
+                queues=np.asarray(self.queues[i], np.float64).copy(),
+                losses=np.asarray(self.losses[i], np.float64).copy(),
+                failures=int(self.failures[i]),
+                aggregations=int(self.aggregations[i]),
+                staleness_mean=float(self.staleness_mean[i]),
+                staleness_max=int(self.staleness_max[i]),
+                stale_discarded=int(self.stale_discarded[i]),
+                dropped_devices=int(self.dropped_devices[i]),
+                lost_devices=int(self.lost_devices[i]),
+                straggler_devices=int(self.straggler_devices[i]),
+                buffer_fill=int(self.buffer_fill[i]),
+                inflight=int(self.inflight[i])))
+        return out
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Outcome of a seeds x V scheduling sweep run as one compiled program
+    (:meth:`repro.fl.sim.Simulation.sweep`). Row (s, v) matches a stepwise
+    ``reset(seeds[s])`` run of the same scenario at ``v_values[v]``
+    row-for-row: ``taus[s, v, t]`` is round t's realized delay,
+    ``selected``/``queues`` its participation and post-update queue state
+    (the seed-determinism test pins this, cross-process)."""
+    seeds: List[int]
+    v_values: List[float]
+    taus: np.ndarray       # (S, V, T)
+    selected: np.ndarray   # (S, V, T, M) bool
+    queues: np.ndarray     # (S, V, T, M)
+
+
+# ---------------------------------------------------------------------------
+# phase A: decide
+# ---------------------------------------------------------------------------
+
+
+def _check_fusable(sim: Simulation, policy) -> None:
+    if getattr(policy, "reads_losses", False):
+        raise ValueError(
+            f"policy {getattr(policy, 'name', policy)!r} reads training "
+            "losses (reads_losses=True): decide and train cannot be "
+            "phase-separated; use Simulation.rounds()")
+    if not getattr(sim.engine, "supports_fused", False):
+        # surface the engine's own refusal (async explains its buffer state)
+        sim.engine.fused_train(sim, None, None, None, None, None, None,
+                               None, None, None)
+
+
+def _decide(sim: Simulation, policy, states: List[ChannelState], t0: int):
+    """Run the decide trajectory over pre-drawn channel states.
+
+    Traced policies (``traced_decide``) go through
+    :meth:`DDSRAPlan.decide_scan` — one compiled program for all rounds;
+    everything else replays the stepwise host loop (same ``schedule(ctx)``
+    calls, same queue handoff, so queues/policy-RNG stay bit-identical).
+    Returns host numpy arrays: (selected (T, M), trained (T, M),
+    l_n (T, N), delay (T,), failures (T,), queues (T, M)).
+    """
+    sc = sim.scenario
+    n_dev = sim.net.cfg.n_devices
+    if getattr(policy, "traced_decide", False):
+        plan = policy.plan_for(sim.workload, sim.net)
+        dec = plan.decide_scan(stack_states(states), sim.queues,
+                               sim.gamma, sc.v)
+        return (np.asarray(dec.selected), np.asarray(dec.trained),
+                np.asarray(dec.l_dev).astype(int),
+                np.asarray(dec.delay, np.float64),
+                np.asarray(dec.failures).astype(int),
+                np.asarray(dec.queues, np.float64))
+
+    m_gw = sim.net.cfg.n_gateways
+    T = len(states)
+    selected = np.zeros((T, m_gw), bool)
+    trained_mask = np.zeros((T, m_gw), bool)
+    l_rounds = np.zeros((T, n_dev), int)
+    delay = np.zeros(T)
+    failures = np.zeros(T, int)
+    queues_out = np.zeros((T, m_gw))
+    queues = sim.queues
+    for k, st in enumerate(states):
+        ctx = RoundContext(t0 + k, sim.workload, sim.net, st, queues,
+                           sim.gamma, sc.v, losses=sim.losses.copy(),
+                           inflight=None)
+        dec = policy.schedule(ctx)
+        queues = dec.queues
+        trained, l_n, gw_delay, fails = resolve_decision(
+            dec, sim.gateways, n_dev)
+        selected[k] = dec.selected
+        trained_mask[k, trained] = True
+        l_rounds[k] = l_n
+        delay[k] = max(gw_delay.values(), default=0.0)
+        failures[k] = fails
+        queues_out[k] = queues
+    return selected, trained_mask, l_rounds, delay, failures, queues_out
+
+
+# ---------------------------------------------------------------------------
+# phase B: host batch replay (exact RNG parity with the stepwise loop)
+# ---------------------------------------------------------------------------
+
+
+def _replay_batches(sim: Simulation, trained_mask: np.ndarray,
+                    l_rounds: np.ndarray):
+    """Pack every round through the engine's ``_pack_round`` — consuming
+    ``sim.rng`` with exactly the stepwise draws — and stack the packed
+    tensors into per-tier arrays with a leading round axis.
+
+    Returns per-tier tuples (xs, ys, masks, ls, ws, gws): tier k carries
+    ``(T, S_k, ...)`` arrays, ready for the fused training scan. Rounds
+    where nobody trains still pack (zero draws, zero masks/weights), so
+    shapes stay fixed. Each packed tensor is written straight into row k
+    of a preallocated stacked buffer — the replay pays exactly one copy
+    per tensor, the same as the stepwise loop's per-round conversion.
+    """
+    T = trained_mask.shape[0]
+    layout0 = None
+    stacked = None
+    for k in range(T):
+        trained = [int(m) for m in np.where(trained_mask[k])[0]]
+        _, batch, layout, l_slot, w_slot, slot_gw = \
+            sim.engine._pack_round(sim, trained, l_rounds[k])
+        if layout0 is None:
+            layout0 = layout
+        elif layout is not layout0:
+            raise RuntimeError(
+                "cohort layout changed across rounds (capacity fallback); "
+                "the fused scan needs fixed shapes — use "
+                "Simulation.rounds()")
+        if trained:  # stepwise accounting only touches training rounds
+            sim.padding_stats["real_samples"] += float(
+                sum(t.mask.sum() for t in batch.tiers))
+            sim.padding_stats["padded_samples"] += float(
+                layout.padded_samples)
+        sizes = tuple(t.x.shape[0] for t in batch.tiers)
+        if stacked is None:  # round 0 fixes every tier's shape
+            stacked = (
+                tuple(np.empty((T,) + t.x.shape, np.float32)
+                      for t in batch.tiers),
+                tuple(np.empty((T,) + t.y.shape, np.int32)
+                      for t in batch.tiers),
+                tuple(np.empty((T,) + t.mask.shape, np.float32)
+                      for t in batch.tiers),
+                tuple(np.empty((T, s), np.int32) for s in sizes),
+                tuple(np.empty((T, s), np.float32) for s in sizes),
+                tuple(np.empty((T, s) + np.shape(slot_gw)[1:], np.float32)
+                      for s in sizes))
+        xs, ys, masks, ls, ws, gws = stacked
+        off = 0
+        for i, t in enumerate(batch.tiers):
+            xs[i][k] = t.x
+            ys[i][k] = t.y
+            masks[i][k] = t.mask
+            ls[i][k] = l_slot[off:off + sizes[i]]
+            ws[i][k] = w_slot[off:off + sizes[i]]
+            gws[i][k] = slot_gw[off:off + sizes[i]]
+            off += sizes[i]
+    return stacked
+
+
+# ---------------------------------------------------------------------------
+# the fused round loop
+# ---------------------------------------------------------------------------
+
+
+def fused_rounds(sim: Simulation, policy, *,
+                 rounds: Optional[int] = None) -> List[RoundRecord]:
+    """Advance ``sim`` by (up to) ``rounds`` rounds through the fused
+    pipeline (decide scan / host decide -> batch replay -> train scan) and
+    return the same :class:`RoundRecord` stream the stepwise loop yields.
+
+    End state (params, losses, queues, t, delay_sum, both RNG streams)
+    matches stepwise exactly, so fused and stepwise blocks interleave — a
+    checkpoint saved after a fused block resumes into either path.
+    """
+    sc = sim.scenario
+    t0 = sim.t
+    T = sc.rounds - t0 if rounds is None else min(rounds, sc.rounds - t0)
+    if T <= 0:
+        return []
+    _check_fusable(sim, policy)
+
+    # phase A: channel states from the SAME numpy stream as stepwise
+    states = [sim.net.draw() for _ in range(T)]
+    selected, trained_mask, l_rounds, delay, failures, queues = _decide(
+        sim, policy, states, t0)
+
+    # phase B: exact-RNG batch replay + stacking
+    xs, ys, masks, ls, ws, gws = _replay_batches(sim, trained_mask,
+                                                 l_rounds)
+
+    # phase C: one training program for all rounds
+    params, losses, loss_hist = sim.engine.fused_train(
+        sim, sim.params, sim.losses, xs, ys, masks, ls, ws, gws,
+        trained_mask)
+
+    cum = sim.delay_sum + np.cumsum(np.asarray(delay, np.float64))
+    tel = RoundTelemetry(
+        t=t0 + np.arange(T),
+        selected=np.asarray(selected, bool),
+        trained=np.asarray(trained_mask, bool),
+        l_n=np.asarray(l_rounds, int),
+        delay=np.asarray(delay, np.float64),
+        cum_delay=cum,
+        queues=np.asarray(queues, np.float64),
+        losses=np.asarray(loss_hist, np.float64),
+        failures=np.asarray(failures, int),
+        aggregations=np.asarray(trained_mask.any(axis=1), int),
+        staleness_mean=np.zeros(T), staleness_max=np.zeros(T, int),
+        stale_discarded=np.zeros(T, int), dropped_devices=np.zeros(T, int),
+        lost_devices=np.zeros(T, int), straggler_devices=np.zeros(T, int),
+        buffer_fill=np.zeros(T, int), inflight=np.zeros(T, int))
+    records = tel.to_records()
+
+    # commit the end state to the Simulation (stepwise-compatible)
+    sim.params = params
+    sim.losses = np.asarray(losses, np.float64)
+    sim.queues = np.asarray(queues[-1], np.float64).copy()
+    sim.t = t0 + T
+    sim.delay_sum = float(cum[-1])
+
+    # final-round eval only: intermediate accuracies would need param
+    # snapshots inside the scan (records keep accuracy=None elsewhere).
+    last_t = records[-1].t
+    if (last_t + 1) % sc.eval_every == 0 or last_t == sc.rounds - 1:
+        records[-1].accuracy = vgg.accuracy(sim.plan, sim.params,
+                                            sim.ds.x_test, sim.ds.y_test)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# seeds x V sweep
+# ---------------------------------------------------------------------------
+
+
+def _seed_states(sim: Simulation, seed: int, rounds: int
+                 ) -> List[ChannelState]:
+    """The channel trajectory a stepwise ``reset(seed)`` run would draw,
+    without disturbing the live ``sim.net.rng`` stream (the reset(seed)
+    fairness contract: scenario seed replays the pristine stream, any
+    other seed reseeds it)."""
+    if seed == sim.scenario.seed:
+        rng = np.random.default_rng()
+        rng.bit_generator.state = sim._net_rng_state0
+    else:
+        rng = np.random.default_rng(seed)
+    saved = sim.net.rng
+    sim.net.rng = rng
+    try:
+        return [sim.net.draw() for _ in range(rounds)]
+    finally:
+        sim.net.rng = saved
+
+
+def sweep(sim: Simulation, v_values, seeds=None, *,
+          rounds: Optional[int] = None) -> SweepResult:
+    """Run a seeds x V scheduling sweep as ONE compiled program.
+
+    Resolves the scenario policy, which must be traced-decide
+    (``ddsra_jax``); draws each seed's channel trajectory host-side under
+    the reset(seed) contract; stacks them (S, T, ...) and hands off to
+    :meth:`DDSRAPlan.sweep_states` — vmap(seeds) o vmap(V) o scan(rounds).
+    All V lanes of a seed share its channel draws (fair-sweep contract).
+    """
+    policy = sim._resolve_policy(None)
+    if not getattr(policy, "traced_decide", False):
+        raise ValueError(
+            f"Simulation.sweep() needs a traced-decide policy; scenario "
+            f"policy {sim.scenario.policy!r} decides on the host — set "
+            "Scenario.policy='ddsra_jax'")
+    T = sim.scenario.rounds if rounds is None else rounds
+    seeds = [sim.scenario.seed] if seeds is None else [int(s) for s in seeds]
+    per_seed = [stack_states(_seed_states(sim, s, T)) for s in seeds]
+    stacked = jax.tree.map(lambda *a: np.stack(a), *per_seed)
+    plan = policy.plan_for(sim.workload, sim.net)
+    taus, sel, queues = plan.sweep_states(stacked, sim.gamma,
+                                          list(map(float, v_values)))
+    return SweepResult(seeds=seeds, v_values=[float(v) for v in v_values],
+                       taus=taus, selected=sel, queues=queues)

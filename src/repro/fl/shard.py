@@ -43,15 +43,33 @@ from jax.experimental.shard_map import shard_map
 from repro.fl import cohort as cohort_lib
 from repro.fl import sim as sim_lib
 from repro.models.vgg import Params, Plan
-from repro.sharding import COHORT_AXIS, REPLICATED, SLOT_SPEC, cohort_mesh
+from repro.sharding import (COHORT_AXIS, REPLICATED, SLOT_SPEC,
+                            STACKED_SLOT_SPEC, cohort_mesh)
 
 # Trace-time counters (Python side effects run only while tracing), so tests
 # and benchmarks can assert "exactly one compile across rounds".
-TRACE_COUNTS = {"round": 0, "stats": 0}
+# "train_scan" counts traces of the whole-run fused loop (fused_sim).
+TRACE_COUNTS = {"round": 0, "stats": 0, "train_scan": 0}
 
 
 def _psum(v):
     return jax.lax.psum(v, COHORT_AXIS)
+
+
+def _fedavg_psum(final, w, losses, gw):
+    """The two-tier FedAvg + per-gateway loss reduction as masked psums
+    over the cohort axis — the reduction core shared by the per-round
+    sharded program and the whole-run fused loop. ``final``/``w``/
+    ``losses``/``gw`` are local-shard slot-major values; returns the
+    replicated (new_global, gw_loss, gw_count, w_sum)."""
+    w_sum = _psum(jnp.sum(w))
+    new_global = jax.tree.map(
+        lambda s: _psum(jnp.tensordot(w, s, axes=1))
+        / jnp.maximum(w_sum, 1e-12), final)
+    active = (w > 0).astype(jnp.float32)
+    gw_count = _psum(gw.T @ active)                                 # (M,)
+    gw_loss = _psum(gw.T @ (losses * active)) / jnp.maximum(gw_count, 1.0)
+    return new_global, gw_loss, gw_count, w_sum
 
 
 @functools.lru_cache(maxsize=None)
@@ -76,16 +94,8 @@ def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
         # BS-level FedAvg: local weighted partial sums -> one psum. The
         # gateway-level + BS-level averaging telescopes to a single weighted
         # average over participating slots, as in the single-host engine.
-        w_sum = _psum(jnp.sum(w))
-        new_global = jax.tree.map(
-            lambda s: _psum(jnp.tensordot(w, s, axes=1))
-            / jnp.maximum(w_sum, 1e-12), final)
-
-        # per-gateway losses: masked psums over the slot->gateway incidence
-        active = (w > 0).astype(jnp.float32)
-        gw_count = _psum(gw.T @ active)                             # (M,)
-        gw_loss = _psum(gw.T @ (losses * active)) \
-            / jnp.maximum(gw_count, 1.0)
+        # Per-gateway losses: masked psums over the slot->gateway incidence.
+        new_global, gw_loss, gw_count, _ = _fedavg_psum(final, w, losses, gw)
 
         if with_boundary:
             boundary = cohort_lib._boundary_tiers(plan, final_t, xs, masks, ls)
@@ -113,6 +123,55 @@ def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
     fn = shard_map(body, mesh=mesh,
                    in_specs=(rep, tile, tile, tile, tile, tile, tile, rep),
                    out_specs=(rep, rep, rep, tile, tile, rep),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _train_scan_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
+                        compute_dtype: str = "f32"):
+    """Compile-once sharded whole-run loop: ``shard_map(lax.scan(round))``.
+
+    The sharded twin of ``repro.fl.cohort.train_scan``: per-round slot
+    tensors arrive stacked with a leading round axis (sharded on axis 1,
+    ``repro.sharding.STACKED_SLOT_SPEC``), the scan runs *inside* the
+    mapped body so each mesh device sweeps its own slot shard through all
+    rounds and the per-round FedAvg is the same masked-psum reduction the
+    per-round program uses (:func:`_fedavg_psum`). Carries (params,
+    per-gateway losses), applies the same no-trainer/trained-only guards as
+    the single-host scan, returns (params, losses, (T, M) loss history),
+    all replicated.
+    """
+
+    def body(params, losses0, xs, ys, masks, ws, gws, trained, lr):
+        TRACE_COUNTS["train_scan"] += 1
+
+        def step(carry, x):
+            params, losses = carry
+            xs_t, ys_t, masks_t, w_t, gw_t, tr_t = x
+            xs_t = cohort_lib._maybe_flatten(plan, xs_t)
+            final_t, loss_t = cohort_lib._local_train(
+                plan, params, xs_t, ys_t, masks_t, k_iters, lr,
+                compute_dtype)
+            final = cohort_lib._concat_tiers(final_t)   # local slots only
+            new_global, gw_loss, _, w_sum = _fedavg_psum(
+                final, jnp.concatenate(w_t), jnp.concatenate(loss_t),
+                jnp.concatenate(gw_t))
+            any_trained = w_sum > 0
+            params = jax.tree.map(
+                lambda new, old: jnp.where(any_trained, new, old),
+                new_global, params)
+            losses = jnp.where(tr_t, gw_loss, losses)
+            return (params, losses), losses
+
+        (params, losses), loss_hist = jax.lax.scan(
+            step, (params, losses0), (xs, ys, masks, ws, gws, trained))
+        return params, losses, loss_hist
+
+    stk, rep = STACKED_SLOT_SPEC, REPLICATED
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(rep, rep, stk, stk, stk, stk, stk, rep, rep),
+                   out_specs=(rep, rep, rep),
                    check_rep=False)
     return jax.jit(fn)
 
@@ -257,3 +316,16 @@ class ShardedCohortEngine(sim_lib.CohortEngine):
         sc = sim.scenario
         return sharded_cohort_stats(self._mesh(sim), sim.plan, params,
                                     batch, mix, sc.lr, sc.sigma_samples)
+
+    def fused_train(self, sim: "sim_lib.Simulation", params, losses0, xs,
+                    ys, masks, ls, ws, gws, trained):
+        """All rounds as one sharded program: ``shard_map(lax.scan)`` with
+        each tier's slot axis split over the cohort mesh (the engine's
+        layout already rounds tier slot counts to mesh multiples, so the
+        stacked arrays shard evenly — no padding pass needed). ``ls`` is
+        unused (no boundary telemetry inside the scan)."""
+        sc = sim.scenario
+        fn = _train_scan_program(self._mesh(sim), sim.plan, sc.k_iters,
+                                 len(xs), sc.dtype)
+        return fn(params, jnp.asarray(np.asarray(losses0), jnp.float32),
+                  xs, ys, masks, ws, gws, trained, jnp.float32(sc.lr))

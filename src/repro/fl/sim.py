@@ -219,6 +219,39 @@ class RoundRecord:
     inflight: int = 0                  # updates still in flight at round end
 
 
+def resolve_decision(dec: RoundDecision, gateways, n_devices: int):
+    """Resolve a schedule into what actually trains this round.
+
+    The host-side half of the decision contract: for each selected gateway,
+    look up its assigned channel's solution, fail it (counted) when the
+    solve is infeasible or non-finite, and scatter the per-lane partition
+    points of surviving gateways into the dense (N,) vector. The traced
+    twin is ``repro.core.ddsra_jax.resolve_decision_arrays`` — identical
+    semantics over :class:`~repro.core.ddsra_jax.DecisionArrays`, pinned
+    bit-identical by ``tests/test_fused_sim.py``.
+
+    Returns ``(trained, l_n, gw_delay, failures)``: the trained gateway
+    ids (ascending), the (N,) per-device partition points, the per-gateway
+    realized delays and the infeasible-selection count.
+    """
+    trained, l_n = [], np.zeros(n_devices, int)
+    gw_delay: Dict[int, float] = {}
+    failures = 0
+    for m in np.where(dec.selected)[0]:
+        j = int(np.argmax(dec.assignment[m]))
+        sol = dec.solutions.get((int(m), j))
+        if sol is None:
+            continue
+        if not sol.feasible or not np.isfinite(sol.delay):
+            failures += 1     # energy/memory violation: round fails
+            continue
+        gw_delay[int(m)] = float(sol.delay)
+        trained.append(int(m))
+        for i, dev in enumerate(gateways[m].devices):
+            l_n[dev.idx] = int(sol.l_split[i])
+    return trained, l_n, gw_delay, failures
+
+
 @dataclasses.dataclass
 class FLResult:
     """Aggregate outcome of a full run (built by ``Simulation.result_of``)."""
@@ -297,6 +330,10 @@ class Engine:
     # stragglers) and buffer_k; Simulation rejects active fault axes on
     # engines that would silently train fault-free (falsified sweeps).
     supports_faults: bool = False
+    # whether :meth:`fused_train` runs the whole-trajectory scan (the fused
+    # simulation loop, ``repro.fl.fused_sim``); engines without it are
+    # refused up front, before any RNG stream is consumed.
+    supports_fused: bool = False
 
     def estimate_stats(self, sim: "Simulation", params) -> DataStats:
         """Estimate the per-device sigma_n/delta_n/L_n statistics the
@@ -334,6 +371,22 @@ class Engine:
         engines have none (``None``)."""
         return None
 
+    def fused_train(self, sim: "Simulation", params, losses0, xs, ys,
+                    masks, ls, ws, gws, trained):
+        """Run a whole pre-packed training trajectory as one compiled
+        program (the fused simulation loop, ``repro.fl.fused_sim``).
+
+        ``xs/ys/masks/ls/ws/gws`` are per-tier tuples with a leading round
+        axis (tier k: ``(T, S_k, ...)``), ``trained`` the (T, M) bool
+        trained-gateway mask. Returns (final params, final (M,) losses,
+        (T, M) per-round loss history). Engines without a scan-compatible
+        round (the sequential loop, the buffered async engine) raise —
+        ``Simulation.rounds()`` is their only path.
+        """
+        raise NotImplementedError(
+            f"engine {self.name!r} has no fused scan path; use "
+            "Simulation.rounds()")
+
     def reset(self, sim: "Simulation") -> None:
         """Discard engine-internal *run* state (default: none).
 
@@ -368,6 +421,7 @@ class CohortEngine(Engine):
     """
 
     supported_dtypes = ("f32", "bf16")
+    supports_fused = True
 
     def _shard_count(self, sim: "Simulation") -> int:
         """Multiple each tier's slot count must divide into (the cohort
@@ -473,6 +527,16 @@ class CohortEngine(Engine):
             rms[device_ids] = np.asarray(boundary)[batch.slot_of]
             return rms
         return None
+
+    def fused_train(self, sim: "Simulation", params, losses0, xs, ys,
+                    masks, ls, ws, gws, trained):
+        """All rounds as one program: ``lax.scan`` of the fused round
+        (``repro.fl.cohort.train_scan``) over the stacked packed batches
+        and decision tensors."""
+        sc = sim.scenario
+        return cohort_lib.train_scan(
+            sim.plan, params, losses0, xs, ys, masks, ls, ws, gws, trained,
+            np.float32(sc.lr), k_iters=sc.k_iters, compute_dtype=sc.dtype)
 
     def shop_floor_round(self, sim: "Simulation", device_ids: List[int],
                          l_n: np.ndarray, params=None,
@@ -783,15 +847,10 @@ class Simulation:
 
     # -- the round loop --------------------------------------------------
 
-    def rounds(self, policy: PolicyLike = None, *,
-               boundary: bool = False) -> Iterator[RoundRecord]:
-        """Stream one RoundRecord per remaining round.
-
-        ``policy`` (name or instance) overrides the scenario default; when
-        resuming from a checkpoint the restored policy is kept unless a new
-        one is passed. ``boundary=True`` adds per-device boundary-activation
-        RMS telemetry to each record (one extra fused forward per round).
-        """
+    def _ensure_policy(self, policy: PolicyLike):
+        """Resolve/install the active policy (override > restored >
+        scenario default), refusing to silently swap out an unresumable
+        checkpointed custom policy."""
         if policy is not None:
             self._policy = self._resolve_policy(policy)
             self._policy_unresumable = False
@@ -802,6 +861,18 @@ class Simulation:
                     "policy; pass that policy explicitly to rounds()/run() "
                     "to continue")
             self._policy = self._resolve_policy(None)
+        return self._policy
+
+    def rounds(self, policy: PolicyLike = None, *,
+               boundary: bool = False) -> Iterator[RoundRecord]:
+        """Stream one RoundRecord per remaining round.
+
+        ``policy`` (name or instance) overrides the scenario default; when
+        resuming from a checkpoint the restored policy is kept unless a new
+        one is passed. ``boundary=True`` adds per-device boundary-activation
+        RMS telemetry to each record (one extra fused forward per round).
+        """
+        self._ensure_policy(policy)
         while self.t < self.scenario.rounds:
             yield self._step(self._policy, boundary)
 
@@ -818,21 +889,8 @@ class Simulation:
         self.queues = dec.queues
 
         # resolve the schedule into trained gateways + per-device cuts
-        trained, l_n = [], np.zeros(ncfg.n_devices, int)
-        gw_delay: Dict[int, float] = {}
-        failures = 0
-        for m in np.where(dec.selected)[0]:
-            j = int(np.argmax(dec.assignment[m]))
-            sol = dec.solutions.get((int(m), j))
-            if sol is None:
-                continue
-            if not sol.feasible or not np.isfinite(sol.delay):
-                failures += 1     # energy/memory violation: round fails
-                continue
-            gw_delay[int(m)] = float(sol.delay)
-            trained.append(int(m))
-            for i, dev in enumerate(self.gateways[m].devices):
-                l_n[dev.idx] = int(sol.l_split[i])
+        trained, l_n, gw_delay, failures = resolve_decision(
+            dec, self.gateways, ncfg.n_devices)
 
         out = self.engine.run_round(self, dec, trained, l_n, gw_delay,
                                     boundary=boundary)
@@ -881,6 +939,50 @@ class Simulation:
         records = list(self.rounds(policy, boundary=boundary))
         self.flush()     # any per-round save() has fully landed on return
         return self.result_of(records)
+
+    # -- the fused round loop (repro.fl.fused_sim) -----------------------
+
+    def fused_rounds(self, policy: PolicyLike = None, *,
+                     rounds: Optional[int] = None) -> List[RoundRecord]:
+        """Run the remaining rounds as fused scans instead of the stepwise
+        loop: one compiled decide program (traced policies) or a host
+        decide loop, plus ONE compiled training program scanning all
+        rounds — same :class:`RoundRecord` stream, same end state
+        (bit-identical queues/RNG, params to 1e-5; the parity matrix in
+        ``tests/test_fused_sim.py`` pins this). ``rounds`` caps how many
+        rounds this call advances (default: all remaining). Intermediate
+        ``eval_every`` accuracies are not computed inside the scan — only
+        a final-round eval is reported (records keep ``accuracy=None``
+        elsewhere).
+        """
+        from repro.fl import fused_sim
+        return fused_sim.fused_rounds(self, self._ensure_policy(policy),
+                                      rounds=rounds)
+
+    def run_fused(self, policy: PolicyLike = None) -> FLResult:
+        """:meth:`run`, but through :meth:`fused_rounds` — restart the run
+        state, execute every round in fused scans, fold the records into
+        an :class:`FLResult`."""
+        self.restart()
+        records = self.fused_rounds(policy)
+        self.flush()
+        return self.result_of(records)
+
+    def sweep(self, v_values, seeds=None, *,
+              rounds: Optional[int] = None):
+        """Run a seeds x V scheduling sweep as a single compiled program.
+
+        Draws each seed's channel trajectory host-side under the
+        ``reset(seed)`` fairness contract (so sweep lane (s, v) sees
+        exactly the ChannelStates a stepwise ``reset(s)`` run at that V
+        would), stacks them, and runs
+        ``repro.core.ddsra_jax.DDSRAPlan.sweep_states`` — vmap over seeds,
+        vmap over V (lanes share a seed's draws), ``lax.scan`` over
+        rounds. Returns a ``repro.fl.fused_sim.SweepResult``; requires a
+        traced-decide policy (the scenario policy or ``ddsra_jax``).
+        """
+        from repro.fl import fused_sim
+        return fused_sim.sweep(self, v_values, seeds=seeds, rounds=rounds)
 
     def result_of(self, records: List[RoundRecord]) -> FLResult:
         """Fold a list of streamed RoundRecords into an :class:`FLResult`."""

@@ -28,8 +28,11 @@ from repro.models.params import (DEFAULT_RULES, partition_specs,
 COHORT_AXIS = "cohort"
 
 # Canonical specs for the cohort mesh: per-slot arrays shard their leading
-# axis; model parameters / global reductions are replicated.
+# axis; model parameters / global reductions are replicated. Whole-run
+# fused loops (repro.fl.fused_sim) stack rounds in front of the slot axis,
+# so their per-slot arrays shard axis 1 instead (STACKED_SLOT_SPEC).
 SLOT_SPEC = PartitionSpec(COHORT_AXIS)
+STACKED_SLOT_SPEC = PartitionSpec(None, COHORT_AXIS)
 REPLICATED = PartitionSpec()
 
 
@@ -53,4 +56,5 @@ def cohort_mesh(mesh_shape: Optional[Tuple[int, ...]] = None) -> Mesh:
 
 
 __all__ = ["DEFAULT_RULES", "partition_specs", "rules_for_mesh",
-           "COHORT_AXIS", "SLOT_SPEC", "REPLICATED", "cohort_mesh"]
+           "COHORT_AXIS", "SLOT_SPEC", "STACKED_SLOT_SPEC", "REPLICATED",
+           "cohort_mesh"]

@@ -98,18 +98,19 @@ def test_cohort_partial_participation_matches_sequential(cohort_setup):
     assert float(gw_count[1]) == 0.0
 
 
-def test_cohort_compiles_once_across_varying_subsets(cohort_setup):
+def test_cohort_compiles_once_across_varying_subsets(cohort_setup,
+                                                     compile_count):
     """3 rounds with different device subsets and l_n vectors reuse one
     compiled executable (fixed-shape batching contract)."""
     plan, params, ds, d_tilde, gws, gw_onehot = cohort_setup
     rng = np.random.default_rng(0)
-    before = cohort_lib.TRACE_COUNTS["round"]
-    for trained, l_n in [([0], [1, 2, 3, 0, 0, 0]),
-                         ([1], [0, 0, 0, 1, 2, 3]),
-                         ([0, 1], [3, 2, 1, 0, 1, 2])]:
-        _run_cohort(plan, params, ds, d_tilde, gws, gw_onehot, trained,
-                    np.asarray(l_n), rng)
-    assert cohort_lib.TRACE_COUNTS["round"] - before <= 1
+    with compile_count((cohort_lib.TRACE_COUNTS, "round")) as c:
+        for trained, l_n in [([0], [1, 2, 3, 0, 0, 0]),
+                             ([1], [0, 0, 0, 1, 2, 3]),
+                             ([0, 1], [3, 2, 1, 0, 1, 2])]:
+            _run_cohort(plan, params, ds, d_tilde, gws, gw_onehot, trained,
+                        np.asarray(l_n), rng)
+    assert c.count <= 1
 
 
 def test_cohort_round_matches_sequential_vgg():

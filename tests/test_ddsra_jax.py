@@ -83,7 +83,7 @@ def test_round_parity_random_networks():
     assert compared >= 50
 
 
-def test_round_compiles_once_across_rounds():
+def test_round_compiles_once_across_rounds(compile_count):
     """Round-to-round reuse: one trace per network shape, zero after."""
     cfg = _CONFIGS[0]
     net = Network(cfg, np.random.default_rng(0))
@@ -92,10 +92,10 @@ def test_round_compiles_once_across_rounds():
     plan = DDSRAPlan.build(w, net)
     q = np.zeros(cfg.n_gateways)
     plan.round(net.draw(), q, gamma, 10.0)            # warm (or cached)
-    before = ddsra_jax._round_jit._cache_size()
-    for _ in range(5):
-        q = plan.round(net.draw(), q, gamma, 10.0).queues
-    assert ddsra_jax._round_jit._cache_size() == before
+    with compile_count(ddsra_jax._round_jit) as c:
+        for _ in range(5):
+            q = plan.round(net.draw(), q, gamma, 10.0).queues
+    assert c.count == 0
 
 
 def test_scheduler_runs_in_x64_regardless_of_global_flag():
@@ -107,8 +107,8 @@ def test_scheduler_runs_in_x64_regardless_of_global_flag():
     plan = DDSRAPlan.build(w, net)
     out = plan.round_arrays(net.draw(), np.zeros(cfg.n_gateways),
                             np.ones(cfg.n_gateways), 10.0)
-    assert out["lam"].dtype == np.float64
-    assert out["queues"].dtype == np.float64
+    assert out.lam.dtype == np.float64
+    assert out.queues.dtype == np.float64
     assert plan.statics.cumf.dtype == np.float64
 
 

@@ -248,12 +248,12 @@ def test_sharded_run_matches_cohort():
         shd.padding_stats["real_samples"]
 
 
-def test_sharded_compiles_once_across_rounds():
+def test_sharded_compiles_once_across_rounds(compile_count):
     sc = _scenario(rounds=4, tiers=2)
-    before = shard_lib.TRACE_COUNTS["round"]
-    Simulation(sc_sharded := dataclasses.replace(sc, engine="sharded"))
-    Simulation(sc_sharded).run("ddsra")
-    assert shard_lib.TRACE_COUNTS["round"] - before <= 1
+    with compile_count((shard_lib.TRACE_COUNTS, "round")) as c:
+        Simulation(sc_sharded := dataclasses.replace(sc, engine="sharded"))
+        Simulation(sc_sharded).run("ddsra")
+    assert c.count <= 1
 
 
 def test_sharded_shop_floor_round_matches_cohort():
