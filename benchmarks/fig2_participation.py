@@ -33,7 +33,7 @@ def run(rounds: int = 8, model: str = "mlp", seed: int = 0):
     # all devices train every round at the mid cut, in shop-floor order
     # (gateway 0's devices first — the order the sequential loop sampled in)
     device_ids = [dev.idx for gw in sim.gateways for dev in gw.devices]
-    l_n = np.full(sim.net.cfg.n_devices, len(plan) // 2, dtype=int)
+    l_n = np.full(sim.net.cfg.n_devices, plan.n_blocks // 2, dtype=int)
 
     obs_div = np.zeros(m_gw)
     for _ in range(rounds):
@@ -47,7 +47,7 @@ def run(rounds: int = 8, model: str = "mlp", seed: int = 0):
                              for i, n in enumerate(device_ids)])
         v = params
         for _ in range(sim.scenario.k_iters):
-            v, _ = split_lib.split_sgd_step(plan, v, (xc, yc), len(plan) // 2,
+            v, _ = split_lib.split_sgd_step(plan, v, (xc, yc), plan.n_blocks // 2,
                                             np.float32(sim.scenario.lr))
         v_flat = np.asarray(split_lib.flat_params(v))
         for m in range(m_gw):

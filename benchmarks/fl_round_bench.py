@@ -33,6 +33,13 @@ async engine's synchronous-barrier mode against FedBuff-style buffering on
 *simulated* round delay and loss progress. Saves
 ``artifacts/benchmarks/fl_round_bench_churn.json``.
 
+Part five (``--model {vgg,transformer,ssm}`` / ``model="..."``) runs the
+cohort round across the model zoo behind the ``SplitModel`` interface:
+same topology, same scheduler, different architecture (and for the token
+models, the Markov token data plane + flash-attention kernels). Reports
+per-round steady-state time and the one-compile contract per model.
+Saves ``artifacts/benchmarks/fl_round_bench_model_<name>.json``.
+
 Part four (``--fused`` / ``fused_sweep=True``) benches the fused simulation
 loop (``repro.fl.fused_sim``): steady-state rounds/sec of the stepwise
 ``Simulation.rounds()`` loop vs ``fused_rounds()`` (one decide scan + one
@@ -353,11 +360,60 @@ def fused_main(fast: bool = True) -> None:
     })
 
 
+# model-zoo bench points: one Scenario tweak per SplitModel family
+MODEL_SCENARIOS = {
+    "vgg": {"model": "vgg", "width_mult": 0.1},
+    "transformer": {"model": "transformer", "seq_len": 16},
+    "ssm": {"model": "ssm", "seq_len": 16},
+}
+
+
+def model_main(model: str, fast: bool = True) -> None:
+    """Cohort round time for one model-zoo member (``--model NAME``)."""
+    if model not in MODEL_SCENARIOS:
+        raise SystemExit(
+            f"unknown --model {model!r}; choose from {sorted(MODEL_SCENARIOS)}")
+    rounds = 4 if fast else 10
+    sc = Scenario(rounds=rounds, eval_every=rounds + 1, seed=0, alpha=0.2,
+                  max_dataset=250, engine="cohort",
+                  net=NetworkConfig(n_gateways=4, n_devices=12, n_channels=2),
+                  **MODEL_SCENARIOS[model])
+    sim = Simulation(sc)
+    traces_before = cohort_lib.TRACE_COUNTS["round"]
+    per_round, records = [], []
+    it = sim.rounds("ddsra")
+    for _ in range(rounds):
+        with timed() as t:
+            records.append(next(it))
+        per_round.append(t["s"])
+    traces = cohort_lib.TRACE_COUNTS["round"] - traces_before
+    steady = per_round[1:] if rounds > 1 else per_round
+    round_ms = sum(steady) * 1e3 / len(steady)
+    emit(f"fl_model_{model}_round_ms", round_ms,
+         f"blocks={sim.plan.n_blocks};cuts={len(sim.plan.valid_cuts)};"
+         f"compile_s={per_round[0]:.1f};compiles={traces}")
+    assert traces <= 1, f"{model} cohort step retraced across rounds"
+    final_loss = float(np.mean(records[-1].losses))
+    assert np.isfinite(final_loss), f"{model} training diverged"
+    save_json(f"fl_round_bench_model_{model}", {
+        "model": model, "rounds": rounds,
+        "devices": sc.net.n_devices, "gateways": sc.net.n_gateways,
+        "n_blocks": sim.plan.n_blocks,
+        "valid_cuts": len(sim.plan.valid_cuts),
+        "stats_s": sim.stats_seconds, "compile_round_s": per_round[0],
+        "round_ms": round_ms, "compiles": traces,
+        "final_loss": final_loss,
+    })
+
+
 def main(fast: bool = True, churn_sweep: bool = False,
-         fused_sweep: bool = False) -> None:
+         fused_sweep: bool = False, model: str | None = None) -> None:
     import jax
     jax.numpy.zeros(1).block_until_ready()   # generic runtime warmup
 
+    if model is not None:
+        model_main(model, fast=fast)
+        return
     if churn_sweep:
         churn_main(fast=fast)
         return

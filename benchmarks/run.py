@@ -27,6 +27,13 @@ BENCHES = [
      "churn/straggler sweep: sync barrier vs buffered async delay"),
     ("fl_round_bench --fused", "fl_round_bench", {"fused_sweep": True},
      "fused scan-the-round-loop vs stepwise rounds/sec + sweep farm"),
+    ("fl_round_bench --model vgg", "fl_round_bench", {"model": "vgg"},
+     "model-zoo round bench: VGG-11 (the paper's model)"),
+    ("fl_round_bench --model transformer", "fl_round_bench",
+     {"model": "transformer"},
+     "model-zoo round bench: GQA decoder on the flash-attention path"),
+    ("fl_round_bench --model ssm", "fl_round_bench", {"model": "ssm"},
+     "model-zoo round bench: Mamba-2/SSD decoder"),
     ("scheduler_bench", "scheduler_bench", {},
      "DDSRA decide latency: numpy oracle vs jitted control plane"),
     ("theorem2_tradeoff", "theorem2_tradeoff", {},

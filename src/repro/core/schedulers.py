@@ -11,8 +11,10 @@ Two class-level flags tell the fused simulation loop
 (``repro.fl.fused_sim``) what a policy can do:
 
 * ``traced_decide`` — the policy's whole decide trajectory can run as one
-  compiled ``lax.scan`` (only ``ddsra_jax``); other policies decide via a
-  host loop in the fused path, which is still exact.
+  compiled ``lax.scan`` (``ddsra_jax`` and, via
+  ``repro.core.baseline_jax``, the fixed-resource ``round_robin`` /
+  ``random`` baselines); other policies decide via a host loop in the
+  fused path, which is still exact.
 * ``reads_losses`` — the policy's decisions depend on training feedback
   (``ctx.losses``), so decide and train cannot be phase-separated; the
   fused path refuses such policies (only ``loss_driven``).
@@ -220,8 +222,39 @@ class DDSRAJaxScheduler:
             ctx.state, ctx.queues, ctx.gamma_rates, ctx.v)
 
 
+class _TracedBaseline:
+    """Mixin: fused-decide support for the fixed-resource baselines.
+
+    A baseline round at fixed resources is pure data — the gateway picks —
+    plus the feasibility/delay evaluation ``repro.core.baseline_jax``
+    traces, so the fused simulation loop can scan the whole decide
+    trajectory in one compiled program. Subclasses supply the picks via
+    :meth:`traced_chosen`; the fused loop feeds them to
+    :meth:`BaselinePlan.decide_scan` as the scan's round axis.
+    """
+
+    traced_decide = True
+
+    def plan_for(self, workload, net):
+        """One BaselinePlan per (net, workload) pair, keyed by identity
+        (the DDSRAJaxScheduler caching contract)."""
+        from repro.core.baseline_jax import BaselinePlan
+        cache = getattr(self, "_plans", None)
+        if cache is None:
+            cache = self._plans = {}
+        key = (id(net), id(workload))
+        hit = cache.get(key)
+        if hit is None or hit[0] is not net or hit[1] is not workload:
+            cache[key] = (net, workload, BaselinePlan.build(workload, net))
+        return cache[key][2]
+
+    def traced_chosen(self, t0: int, rounds: int, net: Network) -> np.ndarray:
+        """(rounds, J) gateway picks for rounds ``t0 .. t0+rounds-1``."""
+        raise NotImplementedError
+
+
 @register_policy("random", kwargs=("seed",))
-class RandomScheduler:
+class RandomScheduler(_TracedBaseline):
     """Random Scheduling [26]: uniform J gateways per round."""
 
     def __init__(self, seed: int = 0):
@@ -232,9 +265,17 @@ class RandomScheduler:
         chosen = self.rng.choice(m, size=j, replace=False)
         return _decision_for(ctx, chosen)
 
+    def traced_chosen(self, t0: int, rounds: int, net: Network) -> np.ndarray:
+        """Pre-draw every round's picks from the policy RNG — one
+        ``rng.choice`` per round, exactly the stepwise draws, so the
+        policy RNG state after a fused block matches stepwise."""
+        m, j = net.cfg.n_gateways, net.cfg.n_channels
+        return np.stack([self.rng.choice(m, size=j, replace=False)
+                         for _ in range(rounds)])
+
 
 @register_policy("round_robin")
-class RoundRobinScheduler:
+class RoundRobinScheduler(_TracedBaseline):
     """Round Robin [26]: consecutive groups of J gateways."""
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
@@ -242,6 +283,11 @@ class RoundRobinScheduler:
         start = (ctx.t * j) % m
         chosen = (start + np.arange(j)) % m
         return _decision_for(ctx, chosen)
+
+    def traced_chosen(self, t0: int, rounds: int, net: Network) -> np.ndarray:
+        m, j = net.cfg.n_gateways, net.cfg.n_channels
+        starts = (np.arange(t0, t0 + rounds) * j) % m
+        return (starts[:, None] + np.arange(j)[None, :]) % m
 
 
 @register_policy("loss_driven")

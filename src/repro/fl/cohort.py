@@ -52,8 +52,7 @@ import numpy as np
 
 from repro.fl.data import TieredCohortBatch
 from repro.fl.split import flat_params as _flat
-from repro.models import vgg
-from repro.models.vgg import Params, Plan
+from repro.models.split_model import Params, SplitModel
 
 # Incremented inside the traced bodies (Python side effects run only at trace
 # time), so tests/benchmarks can assert "exactly one compile across rounds".
@@ -82,15 +81,11 @@ def _masked_rms(a: jax.Array, mask: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.sum(a2 * a2 * mask[:, None]) / denom)
 
 
-def _boundary_rms(plan: Plan, params: Params, x, mask, l) -> jax.Array:
+def _boundary_rms(model: SplitModel, params: Params, x, mask, l) -> jax.Array:
     """RMS of the activation crossing the device->gateway boundary at cut
-    ``l`` (a traced int: l=0 ships the raw input, l=len(plan) ships logits
-    — i.e. everything ran device-side)."""
-    norms = [_masked_rms(x, mask)]
-    a = x
-    for kind, layer in zip(plan, params):
-        a = vgg._apply_layer(kind, layer, a)
-        norms.append(_masked_rms(a, mask))
+    ``l`` (a traced int: l=0 ships the raw input, l=model.n_blocks ships
+    logits — i.e. everything ran device-side)."""
+    norms = [_masked_rms(a, mask) for a in model.activations(params, x)]
     return jnp.take(jnp.stack(norms), l)
 
 
@@ -99,12 +94,10 @@ def _boundary_rms(plan: Plan, params: Params, x, mask, l) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _maybe_flatten(plan: Plan, xs: Tuple[jax.Array, ...]):
-    """Flatten images once per round (not inside every scanned epoch) when
-    the plan is all-fc — conv plans keep their NHWC layout."""
-    if all(k in ("fc", "fc_last") for k in plan):
-        return tuple(x.reshape(x.shape[0], x.shape[1], -1) for x in xs)
-    return xs
+def _maybe_flatten(model: SplitModel, xs: Tuple[jax.Array, ...]):
+    """Per-model input prep, once per round (not inside every scanned
+    epoch) — e.g. all-fc stacks flatten images, token models pass through."""
+    return tuple(model.prepare_inputs(x) for x in xs)
 
 
 # Scenario.dtype -> the dtype activations/weights are *computed and shipped*
@@ -123,8 +116,8 @@ def _cast_floats(tree, dtype):
         if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
 
 
-def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr,
-                 compute_dtype: str = "f32"):
+def _local_train(model: SplitModel, params: Params, xs, ys, masks,
+                 k_iters: int, lr, compute_dtype: str = "f32"):
     """K local SGD epochs for every slot: one ``vmap`` segment per tier
     inside one ``lax.scan`` over the epochs.
 
@@ -148,9 +141,9 @@ def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr,
 
     def dev_step(p, xb, yb, mb):
         def loss_of(pp):
-            logits = vgg.forward(plan, _cast_floats(pp, cdt),
-                                 _cast_floats(xb, cdt))
-            return vgg.masked_xent_loss(logits.astype(jnp.float32), yb, mb)
+            logits = model.forward(_cast_floats(pp, cdt),
+                                   _cast_floats(xb, cdt))
+            return model.masked_loss(logits.astype(jnp.float32), yb, mb)
         loss, g = jax.value_and_grad(loss_of)(p)
         new_p = jax.tree.map(lambda w_, g_: w_ - lr * g_, p, g)
         return new_p, loss
@@ -166,10 +159,10 @@ def _local_train(plan: Plan, params: Params, xs, ys, masks, k_iters: int, lr,
     return final, tuple(lh[-1] for lh in loss_hist)
 
 
-def _boundary_tiers(plan: Plan, finals, xs, masks, ls):
+def _boundary_tiers(model: SplitModel, finals, xs, masks, ls):
     """Per-slot boundary-activation RMS, one vmap segment per tier."""
     return tuple(
-        jax.vmap(lambda p, xb, mb, l: _boundary_rms(plan, p, xb, mb, l))(
+        jax.vmap(lambda p, xb, mb, l: _boundary_rms(model, p, xb, mb, l))(
             f, x, m, l)
         for f, x, m, l in zip(finals, xs, masks, ls))
 
@@ -204,7 +197,7 @@ def _batch_tiers(batch):
 # ---------------------------------------------------------------------------
 
 
-def cohort_round_traced(plan: Plan, params: Params, xs, ys, masks, l_n,
+def cohort_round_traced(model: SplitModel, params: Params, xs, ys, masks, l_n,
                         weights, gw_onehot, lr, *, k_iters: int,
                         with_boundary: bool,
                         with_gateway_models: bool = False,
@@ -214,9 +207,9 @@ def cohort_round_traced(plan: Plan, params: Params, xs, ys, masks, l_n,
     training loop (:func:`train_scan` / ``repro.fl.fused_sim``) — one
     implementation, two compilation granularities."""
     TRACE_COUNTS["round"] += 1
-    xs = _maybe_flatten(plan, xs)
+    xs = _maybe_flatten(model, xs)
     sizes = tuple(x.shape[0] for x in xs)
-    final_t, loss_t = _local_train(plan, params, xs, ys, masks, k_iters, lr,
+    final_t, loss_t = _local_train(model, params, xs, ys, masks, k_iters, lr,
                                    compute_dtype)
     final = _concat_tiers(final_t)
     dev_losses = jnp.concatenate(loss_t)
@@ -232,7 +225,7 @@ def cohort_round_traced(plan: Plan, params: Params, xs, ys, masks, l_n,
 
     if with_boundary:
         boundary = jnp.concatenate(_boundary_tiers(
-            plan, final_t, xs, masks, _split_tiers(l_n, sizes)))
+            model, final_t, xs, masks, _split_tiers(l_n, sizes)))
     else:    # skip the extra forward pass; l_n stays unused data
         boundary = jnp.zeros_like(weights)
 
@@ -250,14 +243,14 @@ def cohort_round_traced(plan: Plan, params: Params, xs, ys, masks, l_n,
 
 
 _cohort_round = functools.partial(
-    jax.jit, static_argnames=("plan", "k_iters", "with_boundary",
+    jax.jit, static_argnames=("model", "k_iters", "with_boundary",
                               "with_gateway_models", "compute_dtype")
 )(cohort_round_traced)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("plan", "k_iters", "compute_dtype"))
-def train_scan(plan: Plan, params: Params, losses0, xs, ys, masks, ls, ws,
+                   static_argnames=("model", "k_iters", "compute_dtype"))
+def train_scan(model: SplitModel, params: Params, losses0, xs, ys, masks, ls, ws,
                gws, trained, lr, *, k_iters: int,
                compute_dtype: str = "f32"):
     """The whole training run as ONE program: ``lax.scan`` of the fused
@@ -289,7 +282,7 @@ def train_scan(plan: Plan, params: Params, losses0, xs, ys, masks, ls, ws,
         xs_t, ys_t, masks_t, l_t, w_t, gw_t, tr_t = x
         w = jnp.concatenate(w_t)
         new_global, gw_loss, _, _, _, _ = cohort_round_traced(
-            plan, params, xs_t, ys_t, masks_t, jnp.concatenate(l_t), w,
+            model, params, xs_t, ys_t, masks_t, jnp.concatenate(l_t), w,
             jnp.concatenate(gw_t), lr, k_iters=k_iters,
             with_boundary=False, compute_dtype=compute_dtype)
         any_trained = jnp.sum(w) > 0
@@ -305,7 +298,7 @@ def train_scan(plan: Plan, params: Params, losses0, xs, ys, masks, ls, ws,
     return params, losses, loss_hist
 
 
-def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
+def cohort_round(model: SplitModel, params: Params, batch, l_n, weights, gw_onehot,
                  k_iters: int, lr, with_boundary: bool = True,
                  with_gateway_models: bool = False,
                  compute_dtype: str = "f32") -> Tuple:
@@ -334,7 +327,7 @@ def cohort_round(plan: Plan, params: Params, batch, l_n, weights, gw_onehot,
     sixth element when ``with_gateway_models`` is set.
     """
     xs, ys, masks = _batch_tiers(batch)
-    out = _cohort_round(plan, params, xs, ys, masks,
+    out = _cohort_round(model, params, xs, ys, masks,
                         jnp.asarray(l_n, jnp.int32),
                         jnp.asarray(weights, jnp.float32),
                         jnp.asarray(gw_onehot, jnp.float32),
@@ -370,17 +363,17 @@ def buffer_fedavg(models, weights):
 # ---------------------------------------------------------------------------
 
 
-def _grads_sigma_lips(plan: Plan, params: Params, x, y, mask, lr,
+def _grads_sigma_lips(model: SplitModel, params: Params, x, y, mask, lr,
                       sigma_samples: int):
     """Per-device flat batch gradients, sigma_n and L_n — everything in the
     stats pass that needs **no** cross-device reduction, so the sharded
     engine can run it on a local slot shard and only ``psum`` the global
-    gradient for delta_n. ``x`` must already be flattened for all-fc plans.
-    Returns (grads (N, P), sigma (N,), lips (N,))."""
+    gradient for delta_n. ``x`` must already be through
+    ``model.prepare_inputs``. Returns (grads (N, P), sigma (N,), lips (N,))."""
 
     def batch_grad(p, xb, yb, mb):
         def loss_of(pp):
-            return vgg.masked_xent_loss(vgg.forward(plan, pp, xb), yb, mb)
+            return model.masked_loss(model.forward(pp, xb), yb, mb)
         return _flat(jax.grad(loss_of)(p))
 
     grads = jax.vmap(lambda xb, yb, mb: batch_grad(params, xb, yb, mb))(
@@ -395,8 +388,7 @@ def _grads_sigma_lips(plan: Plan, params: Params, x, y, mask, lr,
         xs, ys, ms = args                                        # (S, ...)
         def one(xi, yi):
             def loss_of(pp):
-                return vgg.xent_loss(vgg.forward(plan, pp, xi[None]),
-                                     yi[None])
+                return model.loss(model.forward(pp, xi[None]), yi[None])
             return _flat(jax.grad(loss_of)(params))
         per = jax.vmap(one)(xs, ys)                              # (S, P)
         cnt = jnp.maximum(jnp.sum(ms), 1.0)
@@ -416,14 +408,13 @@ def _grads_sigma_lips(plan: Plan, params: Params, x, y, mask, lr,
     return grads, sigma, lips
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "sigma_samples"))
-def _cohort_stats(plan: Plan, params: Params, x, y, mask, mix_weights, lr,
-                  *, sigma_samples: int):
+@functools.partial(jax.jit, static_argnames=("model", "sigma_samples"))
+def _cohort_stats(model: SplitModel, params: Params, x, y, mask, mix_weights,
+                  lr, *, sigma_samples: int):
     TRACE_COUNTS["stats"] += 1
-    if all(k in ("fc", "fc_last") for k in plan):
-        x = x.reshape(x.shape[0], x.shape[1], -1)
+    x = model.prepare_inputs(x)
 
-    grads, sigma, lips = _grads_sigma_lips(plan, params, x, y, mask, lr,
+    grads, sigma, lips = _grads_sigma_lips(model, params, x, y, mask, lr,
                                            sigma_samples)
 
     # delta_n: divergence from the D_n-weighted global gradient.
@@ -433,11 +424,11 @@ def _cohort_stats(plan: Plan, params: Params, x, y, mask, mix_weights, lr,
     return sigma, delta, lips
 
 
-def cohort_stats(plan: Plan, params: Params, batch, mix_weights, lr,
+def cohort_stats(model: SplitModel, params: Params, batch, mix_weights, lr,
                  sigma_samples: int):
     """sigma/delta/Lipschitz for every device in one jitted program
     (the seed ran O(devices x samples) sequential jit calls)."""
-    return _cohort_stats(plan, params,
+    return _cohort_stats(model, params,
                          jnp.asarray(batch.x), jnp.asarray(batch.y),
                          jnp.asarray(batch.mask),
                          jnp.asarray(mix_weights, jnp.float32),

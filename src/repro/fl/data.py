@@ -73,6 +73,66 @@ def make_fl_dataset(n_devices: int, sizes: np.ndarray, q_classes: np.ndarray,
     return FLDataset(x_dev, y_dev, x_test, y_test, cls_of)
 
 
+# ---------------------------------------------------------------------------
+# Token corpora for the sequence model zoo (next-token prediction)
+# ---------------------------------------------------------------------------
+
+
+def _markov_steps(rng: np.random.Generator, succ_dev: np.ndarray,
+                  succ_glob: np.ndarray, chi: float, vocab: int,
+                  n_seq: int, length: int) -> np.ndarray:
+    """Walk ``n_seq`` Markov chains of ``length`` tokens at once.
+
+    Each token's successors are one of ``branching`` table entries; every
+    step mixes the device's private table with the shared global one by
+    ``chi`` (the token twin of the q-class non-IID mixing). Vectorized over
+    all sequences, so generation is O(length) table lookups.
+    """
+    seq = np.empty((n_seq, length), np.int32)
+    tok = rng.integers(0, vocab, size=n_seq).astype(np.int32)
+    seq[:, 0] = tok
+    branching = succ_glob.shape[1]
+    for t in range(1, length):
+        branch = rng.integers(0, branching, size=n_seq)
+        use_dev = rng.random(n_seq) < chi
+        tok = np.where(use_dev, succ_dev[tok, branch],
+                       succ_glob[tok, branch]).astype(np.int32)
+        seq[:, t] = tok
+    return seq
+
+
+def make_token_fl_dataset(n_devices: int, sizes: np.ndarray, vocab: int = 128,
+                          seq_len: int = 32, chi: float = 1.0,
+                          branching: int = 4, test_size: int = 256,
+                          seed: int = 0) -> FLDataset:
+    """Synthetic non-IID token corpora for next-token prediction.
+
+    Device ``n`` holds ``sizes[n]`` sequences of ``seq_len`` tokens drawn
+    from a Markov chain: a *shared* global successor table (the learnable
+    structure every device agrees on) chi-mixed with a *private* per-device
+    table (the non-IID component — each device speaks its own dialect).
+    ``x_dev[n]`` is ``(D_n, seq_len)`` int32 tokens, ``y_dev[n]`` the
+    shifted next-token labels of the same shape; the shared test set is
+    drawn from the global table alone. The :class:`FLDataset` shape
+    contract (per-device shards + common test set) is unchanged — only the
+    sample rank/dtype differ, which the cohort packing reads off the data.
+    """
+    rng = np.random.default_rng(seed)
+    succ_glob = rng.integers(0, vocab, size=(vocab, branching))
+    x_dev, y_dev, cls_of = [], [], []
+    for n in range(n_devices):
+        succ_dev = rng.integers(0, vocab, size=(vocab, branching))
+        cls_of.append(np.unique(succ_dev))
+        seq = _markov_steps(rng, succ_dev, succ_glob, chi, vocab,
+                            int(sizes[n]), seq_len + 1)
+        x_dev.append(seq[:, :-1].copy())
+        y_dev.append(seq[:, 1:].copy())
+    seq = _markov_steps(rng, succ_glob, succ_glob, 0.0, vocab,
+                        test_size, seq_len + 1)
+    return FLDataset(x_dev, y_dev, seq[:, :-1].copy(), seq[:, 1:].copy(),
+                     cls_of)
+
+
 def sample_batch(rng: np.random.Generator, ds: FLDataset, n: int,
                  batch: int) -> Tuple[np.ndarray, np.ndarray]:
     """Draw one training batch (without replacement) from device ``n``'s
@@ -277,9 +337,10 @@ def sample_cohort_batch(rng: np.random.Generator, ds: FLDataset,
                  for n in device_ids]                  # rng order preserved
         lens = np.array([len(yb) for _, yb in draws], dtype=int)
         sample_shape = ds.x_dev[0].shape[1:]
+        label_shape = ds.y_dev[0].shape[1:]
         tiers = [CohortBatch(
-            np.zeros((s, w) + sample_shape, np.float32),
-            np.zeros((s, w), np.int32),
+            np.zeros((s, w) + sample_shape, ds.x_dev[0].dtype),
+            np.zeros((s, w) + label_shape, ds.y_dev[0].dtype),
             np.zeros((s, w), np.float32))
             for s, w in zip(layout.tier_slots, layout.tier_widths)]
         slot_of = np.empty(len(device_ids), dtype=int)
@@ -301,8 +362,9 @@ def sample_cohort_batch(rng: np.random.Generator, ds: FLDataset,
     rows = capacity if packed else len(ds.y_dev)
     assert len(device_ids) <= rows, "more participants than cohort slots"
     sample_shape = ds.x_dev[0].shape[1:]
-    x = np.zeros((rows, pad_to) + sample_shape, np.float32)
-    y = np.zeros((rows, pad_to), np.int32)
+    label_shape = ds.y_dev[0].shape[1:]
+    x = np.zeros((rows, pad_to) + sample_shape, ds.x_dev[0].dtype)
+    y = np.zeros((rows, pad_to) + label_shape, ds.y_dev[0].dtype)
     mask = np.zeros((rows, pad_to), np.float32)
     for slot, n in enumerate(device_ids):
         xb, yb = sample_batch(rng, ds, n, int(batch_sizes[n]))

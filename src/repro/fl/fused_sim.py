@@ -7,14 +7,17 @@ fused training program, sync the loss. This module runs the same
 simulate → decide → train trajectory as (up to) two compiled programs plus
 one host replay pass:
 
-* **Fused decide** — for traced policies (``ddsra_jax``) the whole decide
-  trajectory is ONE program: ``lax.scan`` of the traced DDSRA round over
-  the stacked channel states
-  (:meth:`repro.core.ddsra_jax.DDSRAPlan.decide_scan`), resolving each
-  round's :class:`~repro.core.ddsra_jax.DecisionArrays` into the
-  pytree-typed :class:`~repro.core.ddsra_jax.RoundDecisionT` *inside* the
-  scan. Host policies (round_robin, random, the numpy oracle) decide via a
-  host loop instead — still exact, just not fused.
+* **Fused decide** — for traced policies the whole decide trajectory is
+  ONE program: ``lax.scan`` of the traced round over the stacked channel
+  states, resolving each round into the pytree-typed
+  :class:`~repro.core.ddsra_jax.RoundDecisionT` *inside* the scan.
+  ``ddsra_jax`` scans the full Algorithm 1 solve
+  (:meth:`repro.core.ddsra_jax.DDSRAPlan.decide_scan`); the
+  fixed-resource ``round_robin``/``random`` baselines scan the
+  feasibility/delay evaluation of ``repro.core.baseline_jax`` with their
+  gateway picks fed in as data. Remaining host policies (the numpy
+  oracle, loss/delay-driven) decide via a host loop instead — still
+  exact, just not fused.
 * **Batch replay** — :meth:`CohortEngine._pack_round` runs per round on the
   host, consuming ``sim.rng`` with exactly the draws the stepwise loop
   would make (the packing contract), so the fused path is RNG-bit-identical
@@ -54,7 +57,6 @@ import numpy as np
 from repro.core.network import ChannelState, stack_states
 from repro.core.schedulers import RoundContext
 from repro.fl.sim import (RoundRecord, Simulation, resolve_decision)
-from repro.models import vgg
 
 
 class RoundTelemetry(NamedTuple):
@@ -191,8 +193,15 @@ def _decide(sim: Simulation, policy, states: List[ChannelState], t0: int):
     n_dev = sim.net.cfg.n_devices
     if getattr(policy, "traced_decide", False):
         plan = policy.plan_for(sim.workload, sim.net)
+        kwargs = {}
+        if hasattr(policy, "traced_chosen"):
+            # fixed-resource baselines: gateway picks are data — drawn /
+            # computed host-side (preserving the stepwise policy-RNG
+            # stream) and fed to the scan as its round axis
+            kwargs["chosen"] = policy.traced_chosen(t0, len(states),
+                                                    sim.net)
         dec = plan.decide_scan(stack_states(states), sim.queues,
-                               sim.gamma, sc.v)
+                               sim.gamma, sc.v, **kwargs)
         return (np.asarray(dec.selected), np.asarray(dec.trained),
                 np.asarray(dec.l_dev).astype(int),
                 np.asarray(dec.delay, np.float64),
@@ -265,9 +274,9 @@ def _replay_batches(sim: Simulation, trained_mask: np.ndarray,
         sizes = tuple(t.x.shape[0] for t in batch.tiers)
         if stacked is None:  # round 0 fixes every tier's shape
             stacked = (
-                tuple(np.empty((T,) + t.x.shape, np.float32)
+                tuple(np.empty((T,) + t.x.shape, t.x.dtype)
                       for t in batch.tiers),
-                tuple(np.empty((T,) + t.y.shape, np.int32)
+                tuple(np.empty((T,) + t.y.shape, t.y.dtype)
                       for t in batch.tiers),
                 tuple(np.empty((T,) + t.mask.shape, np.float32)
                       for t in batch.tiers),
@@ -353,8 +362,8 @@ def fused_rounds(sim: Simulation, policy, *,
     # snapshots inside the scan (records keep accuracy=None elsewhere).
     last_t = records[-1].t
     if (last_t + 1) % sc.eval_every == 0 or last_t == sc.rounds - 1:
-        records[-1].accuracy = vgg.accuracy(sim.plan, sim.params,
-                                            sim.ds.x_test, sim.ds.y_test)
+        records[-1].accuracy = sim.plan.accuracy(
+            sim.params, sim.ds.x_test, sim.ds.y_test)
     return records
 
 
@@ -398,11 +407,15 @@ def sweep(sim: Simulation, v_values, seeds=None, *,
             f"Simulation.sweep() needs a traced-decide policy; scenario "
             f"policy {sim.scenario.policy!r} decides on the host — set "
             "Scenario.policy='ddsra_jax'")
+    plan = policy.plan_for(sim.workload, sim.net)
+    if not hasattr(plan, "sweep_states"):
+        raise ValueError(
+            f"policy {sim.scenario.policy!r} has no V-sweep (fixed-resource "
+            "baselines ignore V); set Scenario.policy='ddsra_jax'")
     T = sim.scenario.rounds if rounds is None else rounds
     seeds = [sim.scenario.seed] if seeds is None else [int(s) for s in seeds]
     per_seed = [stack_states(_seed_states(sim, s, T)) for s in seeds]
     stacked = jax.tree.map(lambda *a: np.stack(a), *per_seed)
-    plan = policy.plan_for(sim.workload, sim.net)
     taus, sel, queues = plan.sweep_states(stacked, sim.gamma,
                                           list(map(float, v_values)))
     return SweepResult(seeds=seeds, v_values=[float(v) for v in v_values],

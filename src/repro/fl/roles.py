@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.fl import split as split_lib
 from repro.fl.data import FLDataset, sample_batch
-from repro.models.vgg import Params, Plan
+from repro.models.split_model import Params, SplitModel
 
 
 @dataclasses.dataclass
@@ -26,13 +26,13 @@ class Device:
     d_size: int           # |D_n|
     d_tilde: int          # training batch size
 
-    def local_round(self, plan: Plan, global_params: Params, ds: FLDataset,
-                    l_split: int, k_iters: int, lr: float,
+    def local_round(self, model: SplitModel, global_params: Params,
+                    ds: FLDataset, l_split: int, k_iters: int, lr: float,
                     rng: np.random.Generator):
         """One device's local training at partition point l (with its
-        gateway co-executing the top layers)."""
+        gateway co-executing the top blocks)."""
         x, y = sample_batch(rng, ds, self.idx, self.d_tilde)
-        return split_lib.local_train(plan, global_params, x, y, l_split,
+        return split_lib.local_train(model, global_params, x, y, l_split,
                                      k_iters, lr)
 
 
@@ -41,13 +41,13 @@ class Gateway:
     idx: int
     devices: List[Device]
 
-    def shop_floor_round(self, plan: Plan, global_params: Params, ds: FLDataset,
-                         l_splits: np.ndarray, k_iters: int, lr: float,
-                         rng: np.random.Generator):
+    def shop_floor_round(self, model: SplitModel, global_params: Params,
+                         ds: FLDataset, l_splits: np.ndarray, k_iters: int,
+                         lr: float, rng: np.random.Generator):
         """Run all associated devices, combine halves, FedAvg the shop floor."""
         results, weights, losses = [], [], []
         for i, dev in enumerate(self.devices):
-            w_n, loss = dev.local_round(plan, global_params, ds,
+            w_n, loss = dev.local_round(model, global_params, ds,
                                         int(l_splits[i]), k_iters, lr, rng)
             results.append(w_n)
             weights.append(dev.d_tilde)
@@ -57,8 +57,8 @@ class Gateway:
 
 
 class BaseStation:
-    def __init__(self, plan: Plan, params: Params):
-        self.plan = plan
+    def __init__(self, model: SplitModel, params: Params):
+        self.plan = model       # the SplitModel handle (legacy attr name)
         self.params = params
 
     def aggregate(self, models: List[Params], weights: np.ndarray):

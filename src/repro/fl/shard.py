@@ -42,7 +42,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.fl import cohort as cohort_lib
 from repro.fl import sim as sim_lib
-from repro.models.vgg import Params, Plan
+from repro.models.split_model import Params, SplitModel
 from repro.sharding import (COHORT_AXIS, REPLICATED, SLOT_SPEC,
                             STACKED_SLOT_SPEC, cohort_mesh)
 
@@ -73,7 +73,7 @@ def _fedavg_psum(final, w, losses, gw):
 
 
 @functools.lru_cache(maxsize=None)
-def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
+def _round_program(mesh, model: SplitModel, k_iters: int, n_tiers: int,
                    with_boundary: bool, with_gateway_models: bool,
                    compute_dtype: str = "f32"):
     """Compile-once sharded round: slots tiled over the mesh, params
@@ -83,9 +83,9 @@ def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
 
     def body(params, xs, ys, masks, ls, ws, gws, lr):
         TRACE_COUNTS["round"] += 1
-        xs = cohort_lib._maybe_flatten(plan, xs)
+        xs = cohort_lib._maybe_flatten(model, xs)
         final_t, loss_t = cohort_lib._local_train(
-            plan, params, xs, ys, masks, k_iters, lr, compute_dtype)
+            model, params, xs, ys, masks, k_iters, lr, compute_dtype)
         final = cohort_lib._concat_tiers(final_t)       # local slots only
         w = jnp.concatenate(ws)
         losses = jnp.concatenate(loss_t)
@@ -98,7 +98,7 @@ def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
         new_global, gw_loss, gw_count, _ = _fedavg_psum(final, w, losses, gw)
 
         if with_boundary:
-            boundary = cohort_lib._boundary_tiers(plan, final_t, xs, masks, ls)
+            boundary = cohort_lib._boundary_tiers(model, final_t, xs, masks, ls)
         else:
             boundary = tuple(jnp.zeros_like(wt) for wt in ws)
 
@@ -128,7 +128,7 @@ def _round_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
 
 
 @functools.lru_cache(maxsize=None)
-def _train_scan_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
+def _train_scan_program(mesh, model: SplitModel, k_iters: int, n_tiers: int,
                         compute_dtype: str = "f32"):
     """Compile-once sharded whole-run loop: ``shard_map(lax.scan(round))``.
 
@@ -149,9 +149,9 @@ def _train_scan_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
         def step(carry, x):
             params, losses = carry
             xs_t, ys_t, masks_t, w_t, gw_t, tr_t = x
-            xs_t = cohort_lib._maybe_flatten(plan, xs_t)
+            xs_t = cohort_lib._maybe_flatten(model, xs_t)
             final_t, loss_t = cohort_lib._local_train(
-                plan, params, xs_t, ys_t, masks_t, k_iters, lr,
+                model, params, xs_t, ys_t, masks_t, k_iters, lr,
                 compute_dtype)
             final = cohort_lib._concat_tiers(final_t)   # local slots only
             new_global, gw_loss, _, w_sum = _fedavg_psum(
@@ -177,16 +177,15 @@ def _train_scan_program(mesh, plan: Plan, k_iters: int, n_tiers: int,
 
 
 @functools.lru_cache(maxsize=None)
-def _stats_program(mesh, plan: Plan, sigma_samples: int):
+def _stats_program(mesh, model: SplitModel, sigma_samples: int):
     """Compile-once sharded stats pass: device rows tiled over the mesh;
     only the globally-mixed gradient (for delta_n) crosses shards."""
 
     def body(params, x, y, mask, mix_w, lr):
         TRACE_COUNTS["stats"] += 1
-        if all(k in ("fc", "fc_last") for k in plan):
-            x = x.reshape(x.shape[0], x.shape[1], -1)
+        x = model.prepare_inputs(x)
         grads, sigma, lips = cohort_lib._grads_sigma_lips(
-            plan, params, x, y, mask, lr, sigma_samples)
+            model, params, x, y, mask, lr, sigma_samples)
         global_g = _psum(jnp.tensordot(mix_w, grads, axes=1))
         delta = jnp.linalg.norm(grads - global_g[None], axis=1)
         return sigma, delta, lips
@@ -207,7 +206,7 @@ def _pad_rows(a: np.ndarray, rows: int) -> np.ndarray:
     return np.concatenate([a, pad])
 
 
-def sharded_cohort_round(mesh, plan: Plan, params: Params, batch, l_slot,
+def sharded_cohort_round(mesh, model: SplitModel, params: Params, batch, l_slot,
                          w_slot, gw_onehot, k_iters: int, lr,
                          with_boundary: bool = True,
                          with_gateway_models: bool = False,
@@ -236,13 +235,13 @@ def sharded_cohort_round(mesh, plan: Plan, params: Params, batch, l_slot,
                      for a, p in zip(arrs, padded))
 
     xs = pad_all(xs)
-    ys = pad_all(ys, np.int32)
+    ys = pad_all(ys)
     masks = pad_all(masks, np.float32)
     l_t = pad_all(l_t, np.int32)
     w_t = pad_all(w_t, np.float32)
     gw_t = pad_all(gw_t, np.float32)
 
-    fn = _round_program(mesh, plan, k_iters, len(sizes),
+    fn = _round_program(mesh, model, k_iters, len(sizes),
                         with_boundary, with_gateway_models, compute_dtype)
     new_global, gw_loss, gw_count, loss_t, boundary_t, gw_models = fn(
         params, xs, ys, masks, l_t, w_t, gw_t, jnp.float32(lr))
@@ -254,7 +253,7 @@ def sharded_cohort_round(mesh, plan: Plan, params: Params, batch, l_slot,
     return (*out, gw_models) if with_gateway_models else out
 
 
-def sharded_cohort_stats(mesh, plan: Plan, params: Params, batch,
+def sharded_cohort_stats(mesh, model: SplitModel, params: Params, batch,
                          mix_weights, lr, sigma_samples: int):
     """sigma/delta/Lipschitz for every device, sharded over ``mesh``.
 
@@ -265,11 +264,11 @@ def sharded_cohort_stats(mesh, plan: Plan, params: Params, batch,
     n_mesh = mesh.shape[COHORT_AXIS]
     n_dev = batch.x.shape[0]
     rows = -(-n_dev // n_mesh) * n_mesh
-    fn = _stats_program(mesh, plan, sigma_samples)
+    fn = _stats_program(mesh, model, sigma_samples)
     sigma, delta, lips = fn(
         params,
-        jnp.asarray(_pad_rows(np.asarray(batch.x, np.float32), rows)),
-        jnp.asarray(_pad_rows(np.asarray(batch.y, np.int32), rows)),
+        jnp.asarray(_pad_rows(np.asarray(batch.x), rows)),
+        jnp.asarray(_pad_rows(np.asarray(batch.y), rows)),
         jnp.asarray(_pad_rows(np.asarray(batch.mask, np.float32), rows)),
         jnp.asarray(_pad_rows(np.asarray(mix_weights, np.float32), rows)),
         jnp.float32(lr))

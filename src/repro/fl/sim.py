@@ -52,12 +52,12 @@ from repro.core.schedulers import (POLICIES, RoundContext, make_policy,
                                    policy_state, set_policy_state)
 from repro.fl import cohort as cohort_lib
 from repro.fl import split as split_lib
-from repro.fl.data import (CohortLayout, make_fl_dataset, sample_batch,
+from repro.fl.data import (CohortLayout, make_fl_dataset,
+                           make_token_fl_dataset, sample_batch,
                            sample_cohort_batch)
 from repro.fl.faults import FaultModel
 from repro.fl.roles import BaseStation, Device, Gateway
 from repro.models import registry as model_registry
-from repro.models import vgg
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +82,7 @@ class Scenario:
     width_mult: float = 0.25
     classes: int = 10
     mlp_hidden: Tuple[int, ...] = (128, 64)
+    seq_len: int = 32                  # sequence length for token models
     k_iters: int = 5                   # local epochs K
     lr: float = 0.01                   # step size beta
     alpha: float = 0.05                # training data sampling ratio
@@ -723,21 +724,31 @@ class Simulation:
             40)
         self.d_tilde = np.maximum((sc.alpha * self.d_sizes).astype(int), 4)
 
-        # non-IID classes: gateway 0's devices see the widest variety
-        # (paper Sec. VII-B: "the 1-th gateway ... a wider variety")
-        q = np.zeros(ncfg.n_devices, dtype=int)
-        for n in range(ncfg.n_devices):
-            gw = self.net.assign[n]
-            q[n] = sc.classes if gw == 0 else int(self.rng.integers(1, 4))
-        self.ds = make_fl_dataset(ncfg.n_devices, self.d_sizes, q,
-                                  chi=sc.chi, classes=sc.classes,
-                                  seed=sc.seed)
-
-        # model resolved through the registry + layer-level costs (Table II)
+        # model resolved through the registry + layer-level costs (Table II);
+        # built *before* the dataset so its input_kind can pick the data
+        # path (consumes only the jax PRNG — the numpy byte stream the
+        # image dataset replays is untouched).
         key = jax.random.PRNGKey(sc.seed)
         self.plan, params, self.layers = model_registry.build_fl_model(
             sc.model, key, sc)
         self.bs = BaseStation(self.plan, params)
+
+        if self.plan.input_kind == "tokens":
+            # token models: per-device Markov-chain corpora whose transition
+            # tables play the role of the class mixture (chi-mixed)
+            self.ds = make_token_fl_dataset(
+                ncfg.n_devices, self.d_sizes, vocab=self.plan.classes,
+                seq_len=sc.seq_len, chi=sc.chi, seed=sc.seed)
+        else:
+            # non-IID classes: gateway 0's devices see the widest variety
+            # (paper Sec. VII-B: "the 1-th gateway ... a wider variety")
+            q = np.zeros(ncfg.n_devices, dtype=int)
+            for n in range(ncfg.n_devices):
+                gw = self.net.assign[n]
+                q[n] = sc.classes if gw == 0 else int(self.rng.integers(1, 4))
+            self.ds = make_fl_dataset(ncfg.n_devices, self.d_sizes, q,
+                                      chi=sc.chi, classes=sc.classes,
+                                      seed=sc.seed)
 
         o = cm.flops_vector(self.layers)
         g = cm.mem_vector(self.layers, batch=int(self.d_tilde.max()))
@@ -802,7 +813,7 @@ class Simulation:
         ncfg = self.net.cfg
         self.t = 0
         self.queues = np.zeros(ncfg.n_gateways)
-        self.losses = np.full(ncfg.n_gateways, np.log(self.scenario.classes))
+        self.losses = np.full(ncfg.n_gateways, self.plan.init_loss)
         self.delay_sum = 0.0
         # cumulative padded-vs-real sample counts (cohort engines fill this)
         self.padding_stats = {"real_samples": 0.0, "padded_samples": 0.0}
@@ -909,8 +920,8 @@ class Simulation:
 
         acc = None
         if (t + 1) % sc.eval_every == 0 or t == sc.rounds - 1:
-            acc = vgg.accuracy(self.plan, self.params,
-                               self.ds.x_test, self.ds.y_test)
+            acc = self.plan.accuracy(self.params,
+                                     self.ds.x_test, self.ds.y_test)
         return RoundRecord(t=t, selected=dec.selected.copy(),
                            trained=trained, l_n=l_n, delay=out.delay,
                            cum_delay=self.delay_sum,

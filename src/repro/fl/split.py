@@ -1,11 +1,15 @@
 """Split forward/backward across the DNN partition point.
 
 Implements the paper's mechanism exactly (Sec. II-B3): the device runs the
-bottom ``l`` layers forward and ships the boundary activation to the gateway;
-the gateway runs the top layers, computes the loss, backpropagates to the
+bottom ``l`` blocks forward and ships the boundary activation to the gateway;
+the gateway runs the top blocks, computes the loss, backpropagates to the
 boundary and returns the boundary *error*; the device completes backward for
-the bottom layers. Only the boundary activation/error and labels cross the
+the bottom blocks. Only the boundary activation/error and labels cross the
 tier boundary — never raw inputs or intermediate weights.
+
+Everything here is model-agnostic: ``model`` is any
+``repro.models.split_model.SplitModel`` handle (hashable, so it rides jit
+static arguments), and ``params`` is its matching per-block list.
 """
 from __future__ import annotations
 
@@ -15,34 +19,33 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import vgg
-from repro.models.vgg import Params, Plan
+from repro.models.split_model import Params, SplitModel
 
 
-def device_forward(plan: Plan, bottom: Params, x: jax.Array, l: int):
-    """Bottom-layer forward with a VJP handle kept device-side."""
-    act, vjp = jax.vjp(lambda p: vgg.forward_range(plan, p, x, 0, l), bottom)
+def device_forward(model: SplitModel, bottom: Params, x: jax.Array, l: int):
+    """Bottom-block forward with a VJP handle kept device-side."""
+    act, vjp = jax.vjp(lambda p: model.forward_range(p, x, 0, l), bottom)
     return act, vjp
 
 
-def gateway_step(plan: Plan, top: Params, act: jax.Array, labels: jax.Array,
-                 l: int):
-    """Top-layer forward+backward. Returns loss, top grads, boundary error."""
+def gateway_step(model: SplitModel, top: Params, act: jax.Array,
+                 labels: jax.Array, l: int):
+    """Top-block forward+backward. Returns loss, top grads, boundary error."""
     def loss_of(p, a):
-        logits = vgg.forward_range(plan, [None] * l + p, a, l, len(plan))
-        return vgg.xent_loss(logits, labels)
+        logits = model.forward_range([None] * l + p, a, l, model.n_blocks)
+        return model.loss(logits, labels)
 
     loss, (g_top, g_act) = jax.value_and_grad(loss_of, argnums=(0, 1))(top, act)
     return loss, g_top, g_act
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
-def split_sgd_step(plan: Plan, params: Params, batch_xy, l: int, lr):
+def split_sgd_step(model: SplitModel, params: Params, batch_xy, l: int, lr):
     """One local iteration of split training at partition point ``l``."""
     x, labels = batch_xy
     bottom, top = params[:l], params[l:]
-    act, vjp = device_forward(plan, bottom, x, l)
-    loss, g_top, g_act = gateway_step(plan, top, act, labels, l)
+    act, vjp = device_forward(model, bottom, x, l)
+    loss, g_top, g_act = gateway_step(model, top, act, labels, l)
     (g_bottom,) = vjp(g_act)
 
     def sgd(p, g):
@@ -52,13 +55,29 @@ def split_sgd_step(plan: Plan, params: Params, batch_xy, l: int, lr):
     return new_params, loss
 
 
-def local_train(plan: Plan, params: Params, x, y, l: int, k_iters: int,
+@functools.partial(jax.jit, static_argnames=("model", "k_iters"))
+def _local_sgd(model: SplitModel, params: Params, x, y, k_iters: int, lr):
+    """K split-SGD epochs as one scan. The partition point drops out of the
+    math (split ≡ unsplit — pinned by the parity tests), so one program
+    covers every ``l`` and the loss carry stays on device."""
+    def step(p, _):
+        loss, g = jax.value_and_grad(
+            lambda pp: model.loss(model.forward(pp, x), y))(p)
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g), loss
+
+    params, losses = jax.lax.scan(step, params, None, length=k_iters)
+    return params, losses[-1]
+
+
+def local_train(model: SplitModel, params: Params, x, y, l: int, k_iters: int,
                 lr: float) -> Tuple[Params, float]:
-    """K local epochs over the sampled batch (paper's update rule)."""
-    loss = jnp.inf
-    lr = jnp.float32(lr)
-    for _ in range(k_iters):
-        params, loss = split_sgd_step(plan, params, (x, y), l, lr)
+    """K local epochs over the sampled batch (paper's update rule).
+
+    One jitted program regardless of ``l`` (no per-partition-point re-jit),
+    one host transfer for the final loss (no per-iteration sync).
+    """
+    del l  # numerically irrelevant: split training ≡ unsplit SGD
+    params, loss = _local_sgd(model, params, x, y, k_iters, jnp.float32(lr))
     return params, float(loss)
 
 
@@ -66,9 +85,9 @@ def local_train(plan: Plan, params: Params, x, y, l: int, k_iters: int,
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def flat_grad(plan: Plan, params: Params, x, y) -> jnp.ndarray:
+def flat_grad(model: SplitModel, params: Params, x, y) -> jnp.ndarray:
     def loss_of(p):
-        return vgg.xent_loss(vgg.forward(plan, p, x), y)
+        return model.loss(model.forward(p, x), y)
     g = jax.grad(loss_of)(params)
     return jnp.concatenate([l_.ravel() for l_ in jax.tree.leaves(g)])
 

@@ -25,7 +25,7 @@ __all__ = ["FLConfig", "FLResult", "FLTrainer"]
 class FLConfig:
     """Deprecated: use ``repro.fl.sim.Scenario`` (same fields, plus the
     network config embedded as ``net`` and ``scheduler`` renamed ``policy``)."""
-    model: str = "vgg"            # vgg | mlp
+    model: str = "vgg"            # repro.models.registry.FL_MODELS key
     width_mult: float = 0.25
     classes: int = 10
     k_iters: int = 5              # local epochs K

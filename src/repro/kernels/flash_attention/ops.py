@@ -1,48 +1,129 @@
-"""Jit'd public wrapper for the flash-attention kernel (GQA-aware)."""
+"""Differentiable public wrappers for the flash-attention kernel.
+
+Mirrors the fused_linear op layer: one ``impl`` switch selects
+
+* ``"pallas"``    — compiled Pallas kernels (forward + the dq / dkdv
+  backward pair from ``kernel.py``),
+* ``"interpret"`` — the same kernels under ``interpret=True`` (CI path),
+* ``"ref"``       — the pure-jnp oracle (``ref.py``), same closed form.
+
+All three run through a single ``jax.custom_vjp`` named ``flash_attention``
+(the name the training jaxpr pins on), saving ``(q, k, v, o, lse)`` as
+residuals; the backward rebuilds the softmax from the log-sum-exp and
+computes ``delta = sum(do * o)`` outside the kernels.
+
+The default impl comes from ``REPRO_FLASH_ATTENTION_IMPL`` when set
+(``pallas`` / ``interpret`` / ``ref``), else ``pallas`` on TPU and ``ref``
+elsewhere — the same contract as ``REPRO_FUSED_LINEAR_IMPL``.
+"""
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import autotune
-from repro.kernels.flash_attention.kernel import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention.kernel import flash_attention as _flash_fwd_kernel
+from repro.kernels.flash_attention.ref import (attention_ref,
+                                               attention_ref_bwd,
+                                               attention_ref_lse)
+
+_IMPLS = ("pallas", "interpret", "ref")
+_ENV_VAR = "REPRO_FLASH_ATTENTION_IMPL"
+
+
+def default_impl() -> str:
+    """Resolve the attention impl: env override, else backend heuristic."""
+    env = os.environ.get(_ENV_VAR)
+    if env is not None:
+        if env not in _IMPLS:
+            raise ValueError(
+                f"{_ENV_VAR}={env!r} invalid; expected one of {_IMPLS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def flash_attention(causal, window, block_q, block_k, impl, q, k, v):
+    out, _ = _flash_fwd(causal, window, block_q, block_k, impl, q, k, v)
+    return out
+
+
+def _flash_fwd(causal, window, block_q, block_k, impl, q, k, v):
+    if impl == "ref":
+        o, lse = attention_ref_lse(q, k, v, causal=causal, window=window)
+    else:
+        o, lse = _flash_fwd_kernel(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k,
+            interpret=(impl == "interpret"), return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, block_q, block_k, impl, res, do):
+    q, k, v, o, lse = res
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    if impl == "ref":
+        return attention_ref_bwd(q, k, v, do, lse, delta,
+                                 causal=causal, window=window)
+    return _kernel.flash_attention_bwd(
+        q, k, v, do, lse, delta, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=(impl == "interpret"))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              *, causal: bool = True, window: Optional[int] = None,
+              block_q: Optional[int] = None, block_k: Optional[int] = None,
+              impl: Optional[str] = None) -> jax.Array:
+    """Differentiable attention on kernel-layout (B, H, S, D) operands."""
+    impl = default_impl() if impl is None else impl
+    if impl not in _IMPLS:
+        raise ValueError(f"impl={impl!r}; expected one of {_IMPLS}")
+    if block_q is None or block_k is None:
+        b, h, s, hd = q.shape
+        tq, tk = autotune.blocks_for("flash_attention", (b, h, s, hd),
+                                     str(q.dtype),
+                                     interpret=(impl != "pallas"))
+        block_q = tq if block_q is None else block_q
+        block_k = tk if block_k is None else block_k
+    return flash_attention(causal, window, block_q, block_k, impl, q, k, v)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret", "use_pallas"))
+                                             "block_k", "interpret",
+                                             "use_pallas", "impl"))
 def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                   *, causal: bool = True, window: Optional[int] = None,
                   block_q: Optional[int] = None,
                   block_k: Optional[int] = None,
-                  interpret: bool = False, use_pallas: bool = True) -> jax.Array:
+                  interpret: bool = False, use_pallas: bool = True,
+                  impl: Optional[str] = None) -> jax.Array:
     """Layout adapter: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd).
 
     Repeats KV heads to match the query heads (grouped-query attention),
-    transposes to the kernel's (B,H,S,D) layout and dispatches to the Pallas
-    kernel (or the jnp oracle when ``use_pallas=False``). Block sizes
-    default to the kernel-selection table
-    (``repro.kernels.autotune.blocks_for`` on the (B,H,S,D) kernel-layout
-    shape; clamped-128 heuristic on a table miss) — pass ``block_q``/
-    ``block_k`` explicitly to override.
+    transposes to the kernel's (B,H,S,D) layout and dispatches through the
+    differentiable :func:`attention` entry (so gradients flow through the
+    Pallas backward kernels; the KV-head repeat autodiffs to group-summed
+    dk/dv). ``impl`` overrides the legacy ``use_pallas``/``interpret``
+    flags when given; block sizes default to the kernel-selection table
+    (``repro.kernels.autotune.blocks_for``; clamped-128 heuristic on a
+    table miss) — pass ``block_q``/``block_k`` explicitly to override.
     """
+    if impl is None:
+        impl = ("interpret" if interpret else "pallas") if use_pallas else "ref"
     b, s, h, hd = q.shape
     kvh = k.shape[2]
     rep = h // kvh
     qt = q.transpose(0, 2, 1, 3)
     kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
     vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
-    fn = flash_attention if use_pallas else attention_ref
-    kw = dict(causal=causal, window=window)
-    if use_pallas:
-        if block_q is None or block_k is None:
-            tq, tk = autotune.blocks_for("flash_attention", (b, h, s, hd),
-                                         str(q.dtype), interpret=interpret)
-            block_q = tq if block_q is None else block_q
-            block_k = tk if block_k is None else block_k
-        kw.update(block_q=block_q, block_k=block_k, interpret=interpret)
-    out = fn(qt, kt, vt, **kw)
+    out = attention(qt, kt, vt, causal=causal, window=window,
+                    block_q=block_q, block_k=block_k, impl=impl)
     return out.transpose(0, 2, 1, 3)

@@ -1,10 +1,21 @@
-"""Pure-jnp oracle for the flash-attention kernel."""
+"""Pure-jnp oracle for the flash-attention kernel (forward + backward)."""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+
+def _mask(s: int, causal: bool, window: Optional[int]) -> jax.Array:
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -15,13 +26,42 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     scale = q.shape[-1] ** -0.5
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
                         preferred_element_type=jnp.float32) * scale
-    qpos = jnp.arange(s)[:, None]
-    kpos = jnp.arange(s)[None, :]
-    mask = jnp.ones((s, s), bool)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
-    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    scores = jnp.where(_mask(s, causal, window)[None, None], scores, -jnp.inf)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def attention_ref_lse(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool = True,
+                      window: Optional[int] = None):
+    """Like :func:`attention_ref` but also returns the (B, H, S) lse."""
+    s = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(_mask(s, causal, window)[None, None], scores, -jnp.inf)
+    lse = jax.nn.logsumexp(scores, axis=-1)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+    return o, lse.astype(jnp.float32)
+
+
+def attention_ref_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                      do: jax.Array, lse: jax.Array, delta: jax.Array,
+                      *, causal: bool = True,
+                      window: Optional[int] = None):
+    """Closed-form (dq, dk, dv) from the saved lse — the jnp twin of the
+    Pallas backward kernels (same math, einsum instead of tiles)."""
+    s = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    q32, k32, v32 = (a.astype(jnp.float32) for a in (q, k, v))
+    do32 = do.astype(jnp.float32)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q32, k32) * scale
+    mask = _mask(s, causal, window)[None, None]
+    p = jnp.where(mask, jnp.exp(scores - lse[..., None]), 0.0)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, do32)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", do32, v32)
+    ds = p * (dp - delta[..., None])
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k32) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q32) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

@@ -57,9 +57,12 @@ def get_bundle(arch: str, smoke: bool = False) -> ModelBundle:
 # FL split-model registry
 # ---------------------------------------------------------------------------
 
-# name -> builder(key, spec) -> (plan, params, List[LayerCost]).  ``spec`` is
-# any object exposing the scenario fields the builder needs (width_mult,
-# classes, mlp_hidden, ...) — typically ``repro.fl.sim.Scenario``.
+# name -> builder(key, spec) -> (SplitModel, params, List[LayerCost]).
+# ``spec`` is any object exposing the scenario fields the builder needs
+# (width_mult, classes, mlp_hidden, seq_len, ...) — typically
+# ``repro.fl.sim.Scenario``. The returned handle implements the
+# ``repro.models.split_model.SplitModel`` contract and is what every FL
+# engine trains through.
 FL_MODELS: Dict[str, Callable[..., Tuple[Any, Any, Any]]] = {}
 
 
@@ -74,7 +77,7 @@ def register_fl_model(name: str):
 
 
 def build_fl_model(name: str, key: jax.Array, spec) -> Tuple[Any, Any, Any]:
-    """Resolve + build ``name`` -> (plan, params, layer costs)."""
+    """Resolve + build ``name`` -> (SplitModel, params, layer costs)."""
     if name not in FL_MODELS:
         raise KeyError(f"unknown FL model {name!r}; known: {sorted(FL_MODELS)}")
     return FL_MODELS[name](key, spec)
@@ -82,18 +85,39 @@ def build_fl_model(name: str, key: jax.Array, spec) -> Tuple[Any, Any, Any]:
 
 @register_fl_model("vgg")
 def _build_vgg(key: jax.Array, spec):
-    from repro.core import costmodel as cm
-    from repro.models import vgg
-    plan, params = vgg.init_vgg11(key, spec.width_mult, spec.classes)
-    return plan, params, cm.vgg11_layers(spec.width_mult, classes=spec.classes)
+    from repro.models import split_model as sm
+    model = sm.VGGSplitModel(width_mult=spec.width_mult, classes=spec.classes)
+    return model, model.init(key), model.layer_costs()
 
 
 @register_fl_model("mlp")
 def _build_mlp(key: jax.Array, spec):
-    from repro.models import vgg
+    from repro.models import split_model as sm
     sizes = (3072, *getattr(spec, "mlp_hidden", (128, 64)), spec.classes)
-    plan, params = vgg.init_mlp(key, sizes)
-    return plan, params, vgg.mlp_layer_costs(sizes)
+    model = sm.MLPSplitModel(sizes=sizes)
+    return model, model.init(key), model.layer_costs()
+
+
+@register_fl_model("transformer")
+def _build_transformer(key: jax.Array, spec):
+    from repro.models import split_model as sm
+    model = sm.SeqSplitModel(sm.FL_TRANSFORMER,
+                             seq_len=getattr(spec, "seq_len", 32))
+    return model, model.init(key), model.layer_costs()
+
+
+@register_fl_model("moe")
+def _build_moe(key: jax.Array, spec):
+    from repro.models import split_model as sm
+    model = sm.SeqSplitModel(sm.FL_MOE, seq_len=getattr(spec, "seq_len", 32))
+    return model, model.init(key), model.layer_costs()
+
+
+@register_fl_model("ssm")
+def _build_ssm(key: jax.Array, spec):
+    from repro.models import split_model as sm
+    model = sm.SeqSplitModel(sm.FL_SSM, seq_len=getattr(spec, "seq_len", 32))
+    return model, model.init(key), model.layer_costs()
 
 
 def demo_batch(cfg: ArchConfig, batch: int, seq: int, rng=None,

@@ -1,0 +1,345 @@
+"""Model-agnostic split-training interface.
+
+The paper's DNN-partition mechanism is model-agnostic: a device trains the
+bottom ``l`` blocks, its gateway the top. This module owns the seam the FL
+stack trains through — every engine sees only a :class:`SplitModel` handle:
+
+* a **hashable, frozen** description of one model (it rides ``jax.jit``
+  static arguments and ``lru_cache`` keys exactly like the old VGG ``plan``
+  tuple did);
+* ``init`` produces ``params`` as a *list of per-block dicts* aligned with
+  ``block_kinds``, so a partition point ``l`` splits ``params[:l]`` /
+  ``params[l:]`` and ``forward_range(lo, hi)`` runs blocks [lo, hi);
+* losses (masked + unmasked), ``accuracy``, valid partition points and the
+  per-block :class:`~repro.core.costmodel.LayerCost` profile the DDSRA
+  partition search prices.
+
+Families:
+
+* :class:`VGGSplitModel` / :class:`MLPSplitModel` — the original layer-list
+  models (``repro.models.vgg``), one block per layer, image inputs;
+* :class:`SeqSplitModel` — any decoder-only ``ArchConfig`` from the model
+  zoo (dense/GQA attention, MoE FFN, Mamba-2 SSD), one block per
+  embedding / attention / SSM / FFN / head boundary, token inputs.
+  Attention routes through the differentiable ``flash_attention`` op
+  (Pallas forward + backward kernels; ``REPRO_FLASH_ATTENTION_IMPL``
+  selects pallas/interpret/ref).
+
+Blocks of a :class:`SeqSplitModel` map 1:1 onto
+``costmodel.arch_layers(cfg, seq)`` entries, so ``layer_costs()`` is the
+analytic per-block profile scaled from per-token to per-sequence (the FL
+data unit is one sequence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+from repro.core import costmodel as cm
+from repro.models import model as model_lib
+from repro.models import params as params_lib
+from repro.models import ssm as ssm_lib
+from repro.models import vgg
+from repro.models.layers import rms_norm
+
+Params = List[Dict[str, Any]]
+
+
+class SplitModel:
+    """Base contract. Subclasses are frozen dataclasses (hashable)."""
+
+    input_kind: str = "image"   # "image" -> float batches, "tokens" -> int32
+    min_cut: int = 0            # smallest valid partition point
+
+    # -- structure ---------------------------------------------------------
+
+    @property
+    def block_kinds(self) -> Tuple[str, ...]:
+        raise NotImplementedError
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.block_kinds)
+
+    @property
+    def valid_cuts(self) -> Tuple[int, ...]:
+        """Partition points ``l``: device trains blocks [0, l)."""
+        return tuple(range(self.min_cut, self.n_blocks + 1))
+
+    # -- params / forward --------------------------------------------------
+
+    def init(self, key: jax.Array) -> Params:
+        raise NotImplementedError
+
+    def apply_block(self, i: int, p: Dict[str, Any], x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def forward_range(self, params: Params, x: jax.Array,
+                      lo: int, hi: int) -> jax.Array:
+        for i in range(lo, hi):
+            x = self.apply_block(i, params[i], x)
+        return x
+
+    def forward(self, params: Params, x: jax.Array) -> jax.Array:
+        return self.forward_range(params, x, 0, self.n_blocks)
+
+    def activations(self, params: Params, x: jax.Array) -> List[jax.Array]:
+        """The tensor crossing each cut: a[0] = input, a[i] = after block i."""
+        acts = [x]
+        for i in range(self.n_blocks):
+            x = self.apply_block(i, params[i], x)
+            acts.append(x)
+        return acts
+
+    def prepare_inputs(self, x: jax.Array) -> jax.Array:
+        """Reshape packed batches (lead-2 axes = slots, width) for block 0."""
+        return x
+
+    # -- losses / eval -----------------------------------------------------
+
+    def loss(self, logits: jax.Array, labels: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def masked_loss(self, logits: jax.Array, labels: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+        """Per-sample mask over a padded batch; equals ``loss`` when all 1."""
+        raise NotImplementedError
+
+    @property
+    def init_loss(self) -> float:
+        """Loss of the uniform predictor (pre-training telemetry value)."""
+        return math.log(self.classes)
+
+    def accuracy(self, params: Params, x, labels, batch: int = 256) -> float:
+        hits, n = 0, 0
+        fwd = _jit_forward(self)
+        for i in range(0, len(x), batch):
+            logits = fwd(params, x[i:i + batch])
+            yb = labels[i:i + batch]
+            hits += int(jnp.sum(jnp.argmax(logits, -1) == yb))
+            n += int(np.size(yb))
+        return hits / max(n, 1)
+
+    # -- cost profile ------------------------------------------------------
+
+    def layer_costs(self) -> List[cm.LayerCost]:
+        raise NotImplementedError
+
+
+@functools.lru_cache(maxsize=32)
+def _jit_forward(model: SplitModel):
+    """Compiled forward per handle, shared across eval rounds."""
+    return jax.jit(lambda p, x: model.forward(p, x))
+
+
+# ---------------------------------------------------------------------------
+# layer-list families (VGG-11 / MLP) — blocks are vgg.py layers
+# ---------------------------------------------------------------------------
+
+
+class _LayerListModel(SplitModel):
+    """Shared plumbing for the ``(plan, params)`` layer-list models."""
+
+    def apply_block(self, i, p, x):
+        return vgg._apply_layer(self.block_kinds[i], p, x)
+
+    def loss(self, logits, labels):
+        return vgg.xent_loss(logits, labels)
+
+    def masked_loss(self, logits, labels, mask):
+        return vgg.masked_xent_loss(logits, labels, mask)
+
+
+_VGG_PLAN: Tuple[str, ...] = tuple(
+    "pool" if item == "M" else "conv" for item in cm.VGG11_PLAN
+) + ("fc", "fc", "fc_last")
+
+
+@dataclasses.dataclass(frozen=True)
+class VGGSplitModel(_LayerListModel):
+    width_mult: float = 1.0
+    classes: int = 10
+    image: int = 32
+
+    @property
+    def block_kinds(self):
+        return _VGG_PLAN
+
+    def init(self, key):
+        plan, params = vgg.init_vgg11(key, self.width_mult, self.classes,
+                                      self.image)
+        assert plan == self.block_kinds
+        return params
+
+    def layer_costs(self):
+        return cm.vgg11_layers(self.width_mult, image=self.image,
+                               classes=self.classes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSplitModel(_LayerListModel):
+    sizes: Tuple[int, ...] = (3072, 128, 64, 10)
+
+    @property
+    def classes(self) -> int:
+        return self.sizes[-1]
+
+    @property
+    def block_kinds(self):
+        return ("fc",) * (len(self.sizes) - 2) + ("fc_last",)
+
+    def prepare_inputs(self, x):
+        # all-fc stack on image data: flatten the sample dims once up front
+        # so packed (slots, width, H, W, C) batches hit block 0 as features.
+        return x.reshape(x.shape[0], x.shape[1], -1) if x.ndim > 3 else x
+
+    def init(self, key):
+        _, params = vgg.init_mlp(key, self.sizes)
+        return params
+
+    def layer_costs(self):
+        return vgg.mlp_layer_costs(self.sizes)
+
+
+# ---------------------------------------------------------------------------
+# sequence families (transformer / MoE / SSM) — blocks are arch_layers entries
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _seq_blocks(cfg: ArchConfig) -> Tuple[Tuple[str, int], ...]:
+    """(kind, layer_idx) per block, 1:1 with ``costmodel.arch_layers``."""
+    blocks: List[Tuple[str, int]] = [("embed", -1)]
+    for i in range(cfg.n_layers):
+        blocks.append(("attn" if cfg.kind(i) == "A" else "ssm", i))
+        if cfg.d_ff:
+            blocks.append(("ffn", i))
+    blocks.append(("head", -1))
+    return tuple(blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqSplitModel(SplitModel):
+    """Token split model over a decoder-only ``ArchConfig``.
+
+    The embedding block stays device-side (``min_cut=1``): tokens are
+    integers, so no gradient can cross the cut below the embedding.
+    """
+
+    cfg: ArchConfig
+    seq_len: int = 32
+
+    input_kind = "tokens"
+    min_cut = 1
+
+    def __post_init__(self):
+        assert self.cfg.enc_layers == 0, "split models are decoder-only"
+        assert not self.cfg.tie_embeddings, (
+            "tied embeddings couple the embed and head blocks across the cut")
+
+    @property
+    def classes(self) -> int:
+        return self.cfg.vocab
+
+    @property
+    def block_kinds(self):
+        return tuple(kind for kind, _ in _seq_blocks(self.cfg))
+
+    def init(self, key):
+        cfg = self.cfg
+        full = params_lib.init_params(key, model_lib.build_template(cfg))
+        pat = model_lib.pattern_of(cfg)
+        blocks: Params = []
+        for kind, li in _seq_blocks(cfg):
+            if kind == "embed":
+                blocks.append({"embed": full["embed"]})
+            elif kind == "head":
+                blocks.append({"final_norm": full["final_norm"],
+                               "unembed": full["unembed"]})
+            else:
+                u, j = divmod(li, len(pat))
+                sub = jax.tree.map(lambda a: a[u], full["blocks"][f"s{j}"])
+                if kind == "ffn":
+                    blocks.append({"ln2": sub["ln2"], "ffn": sub["ffn"]})
+                elif kind == "attn":
+                    blocks.append({"ln1": sub["ln1"], "attn": sub["attn"]})
+                else:
+                    blocks.append({"ln1": sub["ln1"], "mamba": sub["mamba"]})
+        return blocks
+
+    def apply_block(self, i, p, x):
+        cfg = self.cfg
+        kind = self.block_kinds[i]
+        if kind == "embed":
+            return jnp.take(p["embed"], x, axis=0)
+        if kind == "head":
+            return rms_norm(x, p["final_norm"], cfg.norm_eps) @ p["unembed"]
+        if kind == "ffn":
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            return x + model_lib._ffn_apply(h, p["ffn"], cfg)
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if kind == "attn":
+            return x + self._attention(h, p["attn"])
+        return x + ssm_lib.mamba_block(h, p["mamba"], cfg)
+
+    def _attention(self, h, p):
+        from repro.kernels.flash_attention import ops as flash_ops
+        cfg = self.cfg
+        b, s, _ = h.shape
+        positions = jnp.arange(s)[None, :]
+        q, k, v = model_lib._proj_qkv(h, p, cfg, positions)
+        o = flash_ops.gqa_attention(q, k, v, causal=True,
+                                    impl=flash_ops.default_impl())
+        return o.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+
+    def loss(self, logits, labels):
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    def masked_loss(self, logits, labels, mask):
+        # mask is per *sample* (one sequence); broadcast over the seq axis so
+        # padded slots contribute an exact 0, matching the image contract.
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(mask), 1.0) * labels.shape[-1]
+        return -jnp.sum(ll * mask[:, None]) / denom
+
+    def layer_costs(self):
+        # arch_layers prices per *token*; the FL data unit is one sequence.
+        per_tok = cm.arch_layers(self.cfg, self.seq_len, sf=4)
+        return [dataclasses.replace(
+            lc,
+            flops_fwd=lc.flops_fwd * self.seq_len,
+            flops_bwd=lc.flops_bwd * self.seq_len,
+            mem_act_per_sample=lc.mem_act_per_sample * self.seq_len)
+            for lc in per_tok]
+
+
+# ---------------------------------------------------------------------------
+# smoke-size FL zoo configs (registered in repro.models.registry)
+# ---------------------------------------------------------------------------
+
+FL_TRANSFORMER = ArchConfig(
+    name="fl-transformer", family="dense", n_layers=2, d_model=64,
+    n_heads=2, n_kv_heads=2, d_ff=128, vocab=128,
+    source="smoke-size GQA decoder for FL split training")
+
+FL_MOE = ArchConfig(
+    name="fl-moe", family="moe", n_layers=2, d_model=64,
+    n_heads=2, n_kv_heads=1, d_ff=64, vocab=128,
+    moe=MoEConfig(n_experts=4, top_k=2),
+    source="smoke-size MoE decoder for FL split training")
+
+FL_SSM = ArchConfig(
+    name="fl-ssm", family="ssm", n_layers=2, d_model=64,
+    n_heads=1, n_kv_heads=1, d_ff=0, vocab=128,
+    ssm=SSMConfig(d_state=16, d_conv=4, head_dim=32, expand=2, chunk_size=32),
+    source="smoke-size Mamba-2 SSD decoder for FL split training")

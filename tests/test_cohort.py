@@ -15,7 +15,7 @@ from repro.fl.data import make_fl_dataset, sample_cohort_batch
 from repro.fl.roles import Device, Gateway, fedavg
 from repro.kernels.fused_linear import ops as fused_ops
 from repro.kernels.fused_linear.ref import fused_linear_ref
-from repro.models import vgg
+from repro.models import split_model as sm
 
 K_ITERS, LR = 3, 0.05
 
@@ -27,7 +27,8 @@ def cohort_setup():
     d_tilde = np.array([8, 12, 7, 16, 9, 11])
     ds = make_fl_dataset(n_dev, sizes, np.full(n_dev, 3), classes=classes,
                          seed=3)
-    plan, params = vgg.init_mlp(jax.random.PRNGKey(0), (3072, 64, 32, classes))
+    plan = sm.MLPSplitModel(sizes=(3072, 64, 32, classes))
+    params = plan.init(jax.random.PRNGKey(0))
     gws = [Gateway(0, [Device(0, 0, 40, 8), Device(1, 0, 52, 12),
                        Device(2, 0, 37, 7)]),
            Gateway(1, [Device(3, 1, 64, 16), Device(4, 1, 45, 9),
@@ -119,7 +120,8 @@ def test_cohort_round_matches_sequential_vgg():
     sizes = np.array([40, 44])
     d_tilde = np.array([5, 7])
     ds = make_fl_dataset(2, sizes, np.full(2, 3), classes=classes, seed=5)
-    plan, params = vgg.init_vgg11(jax.random.PRNGKey(1), width_mult=0.06)
+    plan = sm.VGGSplitModel(width_mult=0.06)
+    params = plan.init(jax.random.PRNGKey(1))
     gws = [Gateway(0, [Device(0, 0, 40, 5), Device(1, 0, 44, 7)])]
     gw_onehot = np.ones((2, 1))
     l_n = np.array([4, 13])

@@ -157,8 +157,16 @@ def test_fused_refuses_async_engine():
 
 
 def test_sweep_requires_traced_decide_policy():
-    sim = Simulation(_scenario(policy="round_robin"))
+    sim = Simulation(_scenario(policy="loss_driven"))
     with pytest.raises(ValueError, match="traced-decide"):
+        sim.sweep([0.01, 1.0])
+
+
+def test_sweep_refuses_fixed_resource_baselines():
+    # round_robin decides traced now, but a V sweep over it is meaningless:
+    # fixed-resource baselines never read V
+    sim = Simulation(_scenario(policy="round_robin"))
+    with pytest.raises(ValueError, match="V-sweep"):
         sim.sweep([0.01, 1.0])
 
 

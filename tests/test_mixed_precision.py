@@ -129,8 +129,9 @@ def test_local_train_bf16_gemms_run_in_bf16():
     bf16 local-train step contains bf16 dot/conv operands (storage + HBM
     traffic), while the f32 plan contains none."""
     key = jax.random.PRNGKey(0)
-    from repro.models import vgg
-    plan, params = vgg.init_mlp(key, sizes=(16, 8, 4))
+    from repro.models import split_model as sm
+    plan = sm.MLPSplitModel(sizes=(16, 8, 4))
+    params = plan.init(key)
     xs = (jax.random.normal(key, (2, 4, 16)),)
     ys = (jnp.zeros((2, 4), jnp.int32),)
     masks = (jnp.ones((2, 4)),)

@@ -185,8 +185,9 @@ def test_tiered_cohort_round_matches_single_width():
     sizes = np.array([40, 52, 37, 64, 45, 58])
     d_tilde = np.array([8, 12, 7, 16, 9, 11])
     ds = make_fl_dataset(n_dev, sizes, np.full(n_dev, 3), seed=3)
-    from repro.models import vgg
-    plan, params = vgg.init_mlp(jax.random.PRNGKey(0), (3072, 64, 32, 10))
+    from repro.models import split_model as sm
+    plan = sm.MLPSplitModel(sizes=(3072, 64, 32, 10))
+    params = plan.init(jax.random.PRNGKey(0))
     ids = [0, 1, 2, 3, 4, 5]
     gw_of = np.array([0, 0, 0, 1, 1, 1])
     l_n = np.array([0, 1, 2, 3, 1, 2])
@@ -261,7 +262,7 @@ def test_sharded_shop_floor_round_matches_cohort():
     including when the all-device row count does not divide the mesh."""
     sim = Simulation(_scenario(rounds=1))
     ids = [d.idx for gw in sim.gateways for d in gw.devices]
-    l_n = np.full(sim.net.cfg.n_devices, len(sim.plan) // 2, int)
+    l_n = np.full(sim.net.cfg.n_devices, sim.plan.n_blocks // 2, int)
     a = sim.engine.shop_floor_round(sim, ids, l_n,
                                     rng=np.random.default_rng(3))
     b = make_engine("sharded").shop_floor_round(

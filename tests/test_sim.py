@@ -68,10 +68,10 @@ def test_fl_model_registry_resolves_plan_and_costs():
     sc = _scenario()
     plan, params, layers = model_registry.build_fl_model(
         "mlp", jax.random.PRNGKey(0), sc)
-    assert len(plan) == len(params) == len(layers) == 3
+    assert plan.n_blocks == len(params) == len(layers) == 3
     plan_v, params_v, layers_v = model_registry.build_fl_model(
         "vgg", jax.random.PRNGKey(0), sc)
-    assert len(plan_v) == len(params_v) == len(layers_v)
+    assert plan_v.n_blocks == len(params_v) == len(layers_v)
 
 
 # ---------------------------------------------------------------------------
@@ -361,7 +361,7 @@ def test_trainer_shim_boundary_telemetry():
 def test_shop_floor_round_matches_sequential_gateways():
     sim = Simulation(_scenario(rounds=1))
     device_ids = [dev.idx for gw in sim.gateways for dev in gw.devices]
-    l_n = np.full(sim.net.cfg.n_devices, len(sim.plan) // 2, dtype=int)
+    l_n = np.full(sim.net.cfg.n_devices, sim.plan.n_blocks // 2, dtype=int)
 
     _, gw_models, gw_loss, _ = sim.engine.shop_floor_round(
         sim, device_ids, l_n, params=sim.params,

@@ -1,0 +1,284 @@
+"""The model zoo behind the SplitModel interface: split-vs-unsplit parity at
+every valid cut for the transformer/MoE/SSM families, hand-computed FLOP pins
+for the cost profiles DDSRA consumes, registry ergonomics, the flash-attention
+backward pass, and token-model end-to-end runs through the FL engines."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import Scenario, Simulation
+from repro.fl import split as split_lib
+from repro.fl.data import make_token_fl_dataset, sample_cohort_batch
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.flash_attention import ref as flash_ref
+from repro.models import registry as model_registry
+from repro.models import split_model as sm
+
+FAMILIES = {
+    "transformer": sm.FL_TRANSFORMER,
+    "moe": sm.FL_MOE,
+    "ssm": sm.FL_SSM,
+}
+
+
+def _token_batch(model, batch=4, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(kx, (batch, model.seq_len), 0, model.classes,
+                           jnp.int32)
+    y = jax.random.randint(ky, (batch, model.seq_len), 0, model.classes,
+                           jnp.int32)
+    return x, y
+
+
+def _direct_sgd(model, params, x, y, lr):
+    g = jax.grad(lambda p: model.loss(model.forward(p, x), y))(params)
+    return jax.tree.map(lambda w, gw: w - lr * gw, params, g)
+
+
+# ---------------------------------------------------------------------------
+# split-vs-unsplit parity at EVERY valid cut, per family
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_seq_split_parity_all_cuts(family):
+    model = sm.SeqSplitModel(FAMILIES[family], seq_len=8)
+    params = model.init(jax.random.PRNGKey(3))
+    x, y = _token_batch(model)
+    direct = _direct_sgd(model, params, x, y, 0.05)
+    assert model.valid_cuts == tuple(range(1, model.n_blocks + 1))
+    for l in model.valid_cuts:
+        split_new, loss = split_lib.split_sgd_step(model, params, (x, y), l,
+                                                   jnp.float32(0.05))
+        assert jnp.isfinite(loss), (family, l)
+        for a, b in zip(jax.tree.leaves(split_new), jax.tree.leaves(direct)):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5,
+                                       err_msg=f"{family} cut {l}")
+
+
+def test_seq_masked_loss_ignores_padding():
+    model = sm.SeqSplitModel(sm.FL_TRANSFORMER, seq_len=8)
+    params = model.init(jax.random.PRNGKey(0))
+    x, y = _token_batch(model, batch=3)
+    logits = model.forward(params, x)
+    full = model.masked_loss(logits, y, jnp.ones(3, jnp.float32))
+    np.testing.assert_allclose(full, model.loss(logits, y), rtol=1e-6)
+    # a masked-out row with garbage labels must not move the loss
+    y_bad = y.at[2].set(0)
+    mask = jnp.array([1.0, 1.0, 0.0])
+    np.testing.assert_allclose(
+        model.masked_loss(logits, y_bad, mask),
+        model.loss(logits[:2], y[:2]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cost profiles: the numbers DDSRA partitions on, pinned by hand
+# ---------------------------------------------------------------------------
+
+
+def test_layer_costs_align_with_blocks():
+    for family, cfg in FAMILIES.items():
+        model = sm.SeqSplitModel(cfg, seq_len=16)
+        costs = model.layer_costs()
+        assert len(costs) == model.n_blocks, family
+        kind_map = {"embed": "embed", "attn": "attention", "ffn": None,
+                    "ssm": "ssm", "head": "fc"}
+        for bk, lc in zip(model.block_kinds, costs):
+            if bk == "ffn":
+                assert lc.kind in ("ffn", "moe_ffn"), family
+            else:
+                assert lc.kind == kind_map[bk], (family, bk, lc.kind)
+
+
+def test_transformer_flops_pinned():
+    """Hand-computed from FL_TRANSFORMER (d=64, 2 heads of 32, 2 KV heads,
+    d_ff=128) at seq_len=16 — per-token FLOPs x seq_len."""
+    model = sm.SeqSplitModel(sm.FL_TRANSFORMER, seq_len=16)
+    costs = {lc.name: lc for lc in model.layer_costs()}
+    # qkv+out projections: q 2*64*64, k+v 2*(2*64*64), out 2*64*64 = 32768
+    # scores QK^T + AV: 2*2*32*16 + 2*2*16*32 = 4096
+    attn = costs["l0.attn"]
+    assert attn.flops_fwd == (32768 + 4096) * 16 == 589824
+    assert attn.flops_bwd == 2 * attn.flops_fwd
+    # gated FFN: 3 matmuls of 2*64*128 = 49152 per token
+    ffn = costs["l0.ffn"]
+    assert ffn.flops_fwd == 3 * 2 * 64 * 128 * 16 == 786432
+    assert ffn.flops_bwd == 2 * ffn.flops_fwd
+    # unembed: 2*64*128 per token fwd, 2x bwd
+    head = costs["unembed"]
+    assert head.flops_fwd == 2 * 64 * 128 * 16
+    assert head.flops_bwd == 2 * head.flops_fwd
+
+
+def test_moe_ffn_prices_all_experts_resident():
+    model = sm.SeqSplitModel(sm.FL_MOE, seq_len=16)
+    ffn = next(lc for lc in model.layer_costs() if lc.kind == "moe_ffn")
+    # router 2*d*E + top-k expert matmuls: (2*64*4 + 2*3*2*64*64) * 16
+    assert ffn.flops_fwd == (2 * 64 * 4 + 2 * 3 * 2 * 64 * 64) * 16
+    # weights hold ALL experts (weights + grad buffers, sf=4)
+    assert ffn.mem_weights == 2 * 4 * (64 * 4 + 4 * 3 * 64 * 64)
+
+
+# ---------------------------------------------------------------------------
+# registry ergonomics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_model_zoo():
+    assert {"vgg", "mlp", "transformer", "moe", "ssm"} <= set(
+        model_registry.FL_MODELS)
+
+
+def test_registry_duplicate_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        model_registry.register_fl_model("vgg")(lambda key, spec: None)
+
+
+def test_registry_unknown_lists_known():
+    with pytest.raises(KeyError, match="ssm"):
+        model_registry.build_fl_model("no-such-model",
+                                      jax.random.PRNGKey(0), None)
+
+
+def test_registry_builds_split_model_contract():
+    spec = Scenario(model="transformer", seq_len=8)
+    model, params, layers = model_registry.build_fl_model(
+        "transformer", jax.random.PRNGKey(0), spec)
+    assert model.input_kind == "tokens"
+    assert len(layers) == model.n_blocks
+    x, _ = _token_batch(model)
+    assert model.forward(params, x).shape == (4, 8, model.classes)
+
+
+# ---------------------------------------------------------------------------
+# flash attention: custom backward parity + the jaxpr pin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 4)])
+def test_flash_backward_matches_autodiff_reference(impl, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (jax.random.normal(kk, (1, 2, 16, 8), jnp.float32)
+               for kk in ks)
+
+    def via_flash(q, k, v):
+        return jnp.sum(flash_ops.attention(q, k, v, causal=causal,
+                                           window=window, impl=impl) ** 2)
+
+    def via_ref(q, k, v):
+        return jnp.sum(flash_ref.attention_ref(q, k, v, causal=causal,
+                                               window=window) ** 2)
+
+    got = jax.grad(via_flash, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(via_ref, argnums=(0, 1, 2))(q, k, v)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=2e-5, rtol=2e-5)
+
+
+def _primitive_names(jaxpr):
+    names = set()
+    for eqn in jaxpr.eqns:
+        names.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            if hasattr(v, "eqns"):
+                names |= _primitive_names(v)
+            elif hasattr(v, "jaxpr"):
+                names |= _primitive_names(v.jaxpr)
+    return names
+
+
+def test_training_jaxpr_routes_through_flash_attention():
+    """The transformer's training gradient must route attention through the
+    flash_attention custom-vjp (not silently fall back to the naive composed
+    softmax path, whose jaxpr has no custom_vjp_call)."""
+    model = sm.SeqSplitModel(sm.FL_TRANSFORMER, seq_len=8)
+    params = model.init(jax.random.PRNGKey(0))
+    x, y = _token_batch(model)
+    fwd_jaxpr = jax.make_jaxpr(lambda p: model.forward(p, x))(params)
+    # the flash_attention custom-vjp primitive is in the primal trace — so
+    # grad MUST use its custom backward rule (custom_vjp semantics)
+    assert any(n.startswith("custom_vjp_call")
+               for n in _primitive_names(fwd_jaxpr.jaxpr))
+    # and the training gradient keeps attention inside the named wrapper
+    grad_jaxpr = jax.make_jaxpr(
+        jax.grad(lambda p: model.loss(model.forward(p, x), y)))(params)
+    assert "gqa_attention" in grad_jaxpr.pretty_print(use_color=False)
+
+
+# ---------------------------------------------------------------------------
+# token data plane: the Markov dataset + cohort packing
+# ---------------------------------------------------------------------------
+
+
+def test_make_token_fl_dataset_shapes():
+    sizes = np.array([40, 30, 20, 10])
+    ds = make_token_fl_dataset(4, sizes, vocab=64, seq_len=12, chi=0.7,
+                               seed=3)
+    assert len(ds.x_dev) == 4
+    for n, sz in enumerate(sizes):
+        assert ds.x_dev[n].shape == (sz, 12)
+        assert ds.x_dev[n].dtype == np.int32
+        assert ds.y_dev[n].shape == (sz, 12)
+        assert (ds.x_dev[n] < 64).all() and (ds.x_dev[n] >= 0).all()
+    assert ds.x_test.shape[1] == 12
+    # labels are the next-token shift of a single walk
+    seq0 = np.concatenate([ds.x_dev[0][0], ds.y_dev[0][0][-1:]])
+    np.testing.assert_array_equal(ds.y_dev[0][0], seq0[1:])
+
+
+def test_token_dataset_determinism_and_chi():
+    sizes = np.array([16, 16])
+    a = make_token_fl_dataset(2, sizes, vocab=32, seq_len=8, chi=1.0, seed=5)
+    b = make_token_fl_dataset(2, sizes, vocab=32, seq_len=8, chi=1.0, seed=5)
+    np.testing.assert_array_equal(a.x_dev[0], b.x_dev[0])
+    np.testing.assert_array_equal(a.x_test, b.x_test)
+
+
+def test_cohort_packing_preserves_token_layout():
+    sizes = np.array([20, 16, 12])
+    ds = make_token_fl_dataset(3, sizes, vocab=32, seq_len=8, seed=0)
+    rng = np.random.default_rng(0)
+    batch = sample_cohort_batch(rng, ds, [0, 2], np.array([4, 4, 4]),
+                                pad_to=6, capacity=2)
+    assert batch.x.shape == (2, 6, 8) and batch.x.dtype == np.int32
+    assert batch.y.shape == (2, 6, 8) and batch.y.dtype == np.int32
+    assert batch.mask.dtype == np.float32
+    np.testing.assert_array_equal(batch.mask.sum(axis=1), [4.0, 4.0])
+    # padded slots are exact zeros so the masked loss ignores them
+    assert (batch.x[0, 4:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the transformer trains through the real FL engines
+# ---------------------------------------------------------------------------
+
+
+def _tiny_token_scenario(**kw):
+    base = dict(model="transformer", seq_len=8, rounds=2, k_iters=1,
+                eval_every=1, alpha=0.2, max_dataset=400, seed=0,
+                policy="ddsra")
+    base.update(kw)
+    return Scenario(**base)
+
+
+@pytest.mark.parametrize("engine", ["cohort", "sharded"])
+def test_transformer_end_to_end(engine):
+    sim = Simulation(_tiny_token_scenario(engine=engine))
+    assert sim.plan.input_kind == "tokens"
+    res = sim.run()
+    assert len(res.cum_delay) == 2
+    assert np.isfinite(res.accuracy).all()
+    assert np.isfinite(np.asarray(res.losses)).all()
+    # DDSRA partitions over exactly the model's block axis
+    assert sim.workload.n_layers == sim.plan.n_blocks
+
+
+def test_ssm_end_to_end_cohort():
+    sim = Simulation(_tiny_token_scenario(model="ssm", rounds=1))
+    res = sim.run()
+    assert np.isfinite(res.accuracy).all()

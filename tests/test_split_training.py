@@ -7,49 +7,52 @@ import numpy as np
 import pytest
 
 from repro.fl import split as split_lib
-from repro.models import vgg
+from repro.models import split_model as sm
 
 
 @pytest.fixture(scope="module")
 def setup():
-    plan, params = vgg.init_mlp(jax.random.PRNGKey(0), (48, 32, 16, 10))
+    model = sm.MLPSplitModel(sizes=(48, 32, 16, 10))
+    params = model.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 48))
     y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
-    return plan, params, x, y
+    return model, params, x, y
 
 
-def _direct_sgd(plan, params, x, y, lr):
+def _direct_sgd(model, params, x, y, lr):
     def loss_of(p):
-        return vgg.xent_loss(vgg.forward(plan, p, x), y)
+        return model.loss(model.forward(p, x), y)
     g = jax.grad(loss_of)(params)
     return jax.tree.map(lambda w, gw: w - lr * gw, params, g)
 
 
 @pytest.mark.parametrize("l", [0, 1, 2, 3])
 def test_split_step_equals_direct_sgd(setup, l):
-    plan, params, x, y = setup
+    model, params, x, y = setup
     lr = jnp.float32(0.05)
-    split_new, loss = split_lib.split_sgd_step(plan, params, (x, y), l, lr)
-    direct_new = _direct_sgd(plan, params, x, y, 0.05)
+    split_new, loss = split_lib.split_sgd_step(model, params, (x, y), l, lr)
+    direct_new = _direct_sgd(model, params, x, y, 0.05)
     for a, b in zip(jax.tree.leaves(split_new), jax.tree.leaves(direct_new)):
         np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
     assert jnp.isfinite(loss)
 
 
 def test_split_vgg_all_cuts():
-    plan, params = vgg.init_vgg11(jax.random.PRNGKey(0), width_mult=0.06)
+    model = sm.VGGSplitModel(width_mult=0.06)
+    params = model.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
     y = jax.random.randint(jax.random.PRNGKey(2), (2,), 0, 10)
-    direct = _direct_sgd(plan, params, x, y, 0.01)
+    direct = _direct_sgd(model, params, x, y, 0.01)
     for l in (0, 4, 9, 13, 16):
-        split_new, _ = split_lib.split_sgd_step(plan, params, (x, y), l,
+        assert l in model.valid_cuts
+        split_new, _ = split_lib.split_sgd_step(model, params, (x, y), l,
                                                 jnp.float32(0.01))
         for a, b in zip(jax.tree.leaves(split_new), jax.tree.leaves(direct)):
             np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
 
 
 def test_local_train_reduces_loss(setup):
-    plan, params, x, y = setup
-    p1, loss1 = split_lib.local_train(plan, params, x, y, 2, 1, 0.05)
-    p5, loss5 = split_lib.local_train(plan, params, x, y, 2, 10, 0.05)
+    model, params, x, y = setup
+    p1, loss1 = split_lib.local_train(model, params, x, y, 2, 1, 0.05)
+    p5, loss5 = split_lib.local_train(model, params, x, y, 2, 10, 0.05)
     assert loss5 < loss1
