@@ -13,8 +13,8 @@ Two class-level flags tell the fused simulation loop
 * ``traced_decide`` — the policy's whole decide trajectory can run as one
   compiled ``lax.scan`` (``ddsra_jax`` and, via
   ``repro.core.baseline_jax``, the fixed-resource ``round_robin`` /
-  ``random`` baselines); other policies decide via a host loop in the
-  fused path, which is still exact.
+  ``random`` / ``delay_driven`` baselines); other policies decide via a
+  host loop in the fused path, which is still exact.
 * ``reads_losses`` — the policy's decisions depend on training feedback
   (``ctx.losses``), so decide and train cannot be phase-separated; the
   fused path refuses such policies (only ``loss_driven``).
@@ -306,7 +306,7 @@ class LossDrivenScheduler:
 
 
 @register_policy("delay_driven")
-class DelayDrivenScheduler:
+class DelayDrivenScheduler(_TracedBaseline):
     """Select the J gateways with the smallest fixed-resource delay."""
 
     def schedule(self, ctx: RoundContext) -> RoundDecision:
@@ -317,6 +317,13 @@ class DelayDrivenScheduler:
             for mm in range(m)])
         chosen = np.argsort(delays)[:j]
         return _decision_for(ctx, chosen)
+
+    def traced_chosen(self, t0: int, rounds: int, net: Network) -> None:
+        """The greedy pick is a *function of the round's channel draws*, not
+        pre-computable data — returning None tells the fused loop to let
+        ``BaselinePlan.decide_scan`` compute it inside the scan
+        (``repro.core.baseline_jax._delay_chosen``)."""
+        return None
 
 
 # legacy name -> class view of the registry (prefer make_policy / POLICIES)

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.data import TieredCohortBatch
+from repro.fl.data import traced_batch_indices as _traced_indices
 from repro.fl.split import flat_params as _flat
 from repro.models.split_model import Params, SplitModel
 
@@ -248,10 +249,24 @@ _cohort_round = functools.partial(
 )(cohort_round_traced)
 
 
+def _eval_hits(model: SplitModel, params: Params, x_eval, y_test, ev_t):
+    """``lax.cond``-gated in-scan accuracy snapshot: hit count over the
+    full (prepared) test set after this round's update, or -1 on rounds
+    ``eval_every`` skips. Runs on the f32 master params, so it equals the
+    stepwise loop's post-round ``SplitModel.accuracy`` hit count exactly
+    (one full-batch forward; chunking does not change integer hits)."""
+
+    def hits(p):
+        logits = model.forward(p, x_eval)
+        return jnp.sum(jnp.argmax(logits, -1) == y_test).astype(jnp.int32)
+
+    return jax.lax.cond(ev_t, hits, lambda p: jnp.int32(-1), params)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("model", "k_iters", "compute_dtype"))
 def train_scan(model: SplitModel, params: Params, losses0, xs, ys, masks, ls, ws,
-               gws, trained, lr, *, k_iters: int,
+               gws, trained, lr, eval_mask, x_test, y_test, *, k_iters: int,
                compute_dtype: str = "f32"):
     """The whole training run as ONE program: ``lax.scan`` of the fused
     round over stacked per-round inputs.
@@ -272,14 +287,21 @@ def train_scan(model: SplitModel, params: Params, losses0, xs, ys, masks, ls, ws
     * per-gateway losses update only where ``trained`` is set, mirroring
       ``sim.losses[m] = gw_loss[m]`` for trained gateways only.
 
+    ``eval_mask`` is the (T,) bool ``eval_every`` schedule: marked rounds
+    run a ``lax.cond``-gated test-set forward *inside* the scan (see
+    :func:`_eval_hits`), restoring mid-run accuracy snapshots without
+    leaving the fused program.
+
     Returns (final params, final losses (M,), per-round loss history
-    (T, M) f32). One compile per (topology, rounds) shape.
+    (T, M) f32, per-round test hits (T,) int32 — -1 where not evaluated).
+    One compile per (topology, rounds) shape.
     """
     TRACE_COUNTS["train_scan"] += 1
+    x_eval = model.prepare_inputs(x_test)
 
     def step(carry, x):
         params, losses = carry
-        xs_t, ys_t, masks_t, l_t, w_t, gw_t, tr_t = x
+        xs_t, ys_t, masks_t, l_t, w_t, gw_t, tr_t, ev_t = x
         w = jnp.concatenate(w_t)
         new_global, gw_loss, _, _, _, _ = cohort_round_traced(
             model, params, xs_t, ys_t, masks_t, jnp.concatenate(l_t), w,
@@ -290,12 +312,81 @@ def train_scan(model: SplitModel, params: Params, losses0, xs, ys, masks, ls, ws
             lambda new, old: jnp.where(any_trained, new, old),
             new_global, params)
         losses = jnp.where(tr_t, gw_loss, losses)
-        return (params, losses), losses
+        hits = _eval_hits(model, params, x_eval, y_test, ev_t)
+        return (params, losses), (losses, hits)
 
-    (params, losses), loss_hist = jax.lax.scan(
+    (params, losses), (loss_hist, hits) = jax.lax.scan(
         step, (params, jnp.asarray(losses0, jnp.float32)),
-        (xs, ys, masks, ls, ws, gws, trained))
-    return params, losses, loss_hist
+        (xs, ys, masks, ls, ws, gws, trained, eval_mask))
+    return params, losses, loss_hist, hits
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "k_iters", "compute_dtype",
+                                    "tier_widths"))
+def train_scan_traced(model: SplitModel, params: Params, losses0, x_all, y_all,
+                      pool_lens, batch_lens, data_key, ts, slot_devs, ls, ws,
+                      gws, trained, lr, eval_mask, x_test, y_test, *,
+                      k_iters: int, compute_dtype: str = "f32",
+                      tier_widths: Tuple[int, ...]):
+    """:func:`train_scan` with the data plane moved INSIDE the program.
+
+    Instead of host-packed ``(T, S_k, W_k, ...)`` batch stacks, each round
+    gathers its training batches in-scan from the device-resident shard
+    stacks (``repro.fl.data.device_resident_stacks``): ``slot_devs`` maps
+    every tier-major slot to its device id (-1 = empty), and the
+    counter-based draw ``repro.fl.data.traced_batch_indices(data_key, t,
+    dev, ...)`` reproduces the host oracle's indices bit-for-bit — so the
+    whole run ships only the decision tensors (a few KB/round) to the
+    accelerator, not ``T`` copies of padded sample batches.
+
+    Empty slots gather device 0's rows with an all-zero validity mask; the
+    masked loss multiplies their (finite) per-row losses by exactly 0.0,
+    so the garbage rows contribute the same exact-zero loss and gradients
+    as the host plane's zero padding. ``tier_widths`` is static — it fixes
+    each tier's gather width ``W_k``.
+
+    Returns the same (params, losses, loss_hist, hits) as
+    :func:`train_scan`.
+    """
+    TRACE_COUNTS["train_scan"] += 1
+    x_eval = model.prepare_inputs(x_test)
+    l_max = x_all.shape[1]
+
+    def gather_tier(t, devs, width):
+        def one(dev):
+            d = jnp.maximum(dev, 0)
+            idx = _traced_indices(data_key, t, d, pool_lens[d], width, l_max)
+            mb = ((jnp.arange(width) < batch_lens[d]) & (dev >= 0)
+                  ).astype(jnp.float32)
+            return x_all[d][idx], y_all[d][idx], mb
+        return jax.vmap(one)(devs)
+
+    def step(carry, x):
+        params, losses = carry
+        t, sd_t, l_t, w_t, gw_t, tr_t, ev_t = x
+        gathered = [gather_tier(t, devs, width)
+                    for devs, width in zip(sd_t, tier_widths)]
+        xs_t = tuple(g[0] for g in gathered)
+        ys_t = tuple(g[1] for g in gathered)
+        masks_t = tuple(g[2] for g in gathered)
+        w = jnp.concatenate(w_t)
+        new_global, gw_loss, _, _, _, _ = cohort_round_traced(
+            model, params, xs_t, ys_t, masks_t, jnp.concatenate(l_t), w,
+            jnp.concatenate(gw_t), lr, k_iters=k_iters,
+            with_boundary=False, compute_dtype=compute_dtype)
+        any_trained = jnp.sum(w) > 0
+        params = jax.tree.map(
+            lambda new, old: jnp.where(any_trained, new, old),
+            new_global, params)
+        losses = jnp.where(tr_t, gw_loss, losses)
+        hits = _eval_hits(model, params, x_eval, y_test, ev_t)
+        return (params, losses), (losses, hits)
+
+    (params, losses), (loss_hist, hits) = jax.lax.scan(
+        step, (params, jnp.asarray(losses0, jnp.float32)),
+        (ts, slot_devs, ls, ws, gws, trained, eval_mask))
+    return params, losses, loss_hist, hits
 
 
 def cohort_round(model: SplitModel, params: Params, batch, l_n, weights, gw_onehot,

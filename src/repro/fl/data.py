@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -374,3 +376,95 @@ def sample_cohort_batch(rng: np.random.Generator, ds: FLDataset,
         y[row, :b] = yb
         mask[row, :b] = 1.0
     return CohortBatch(x, y, mask)
+
+
+# ---------------------------------------------------------------------------
+# the traced data plane: counter-based draws + device-resident shard stacks
+# ---------------------------------------------------------------------------
+
+
+def traced_batch_indices(data_key, t, dev, pool_len, width: int, l_max: int):
+    """(width,) sample indices for device ``dev`` at round ``t`` — the
+    traced twin of :func:`sample_batch`'s without-replacement draw.
+
+    The draw is *counter-based*: the key folds in the absolute round index
+    and the device id, so any consumer — the eager host oracle
+    (:func:`sample_cohort_batch_traced`), the fused cohort scan
+    (``repro.fl.cohort.train_scan_traced``) and its sharded twin — derives
+    bit-identical indices with no stream state to thread. ``u`` weights the
+    ``l_max`` padded pool positions, invalid rows (``>= pool_len``) are
+    pushed to ``+inf``, and the ``width`` smallest in ascending order are
+    the draw — so a wider slot's draw extends a narrower one's
+    (prefix-consistency across tier widths).
+
+    The selection is ``lax.top_k(-u, width)``, not a full
+    ``argsort(u)[:width]``: both order ascending-by-``u`` with ties broken
+    by lower index (XLA top_k's documented tie rule == stable argsort), so
+    the indices are identical — but the partial selection is ~10x cheaper
+    inside the fused train scan, where it runs once per slot per round.
+    """
+    k = jax.random.fold_in(jax.random.fold_in(data_key, t), dev)
+    u = jax.random.uniform(k, (l_max,))
+    u = jnp.where(jnp.arange(l_max) < pool_len, u, jnp.inf)
+    _, idx = jax.lax.top_k(-u, width)
+    return idx
+
+
+def device_resident_stacks(ds: FLDataset):
+    """Pad every device's private shard into one device-resident stack.
+
+    Returns ``(x_all (N, L_max, *feat), y_all (N, L_max, *lab),
+    pool_lens (N,) int32)`` with zero padding past each device's shard —
+    the arrays the traced data plane gathers training batches from inside
+    the fused scan (padding rows are only ever gathered masked-out).
+    """
+    pool = np.array([len(y) for y in ds.y_dev], np.int32)
+    l_max = int(pool.max())
+    n = len(ds.y_dev)
+    x_all = np.zeros((n, l_max) + ds.x_dev[0].shape[1:], ds.x_dev[0].dtype)
+    y_all = np.zeros((n, l_max) + ds.y_dev[0].shape[1:], ds.y_dev[0].dtype)
+    for i, (xd, yd) in enumerate(zip(ds.x_dev, ds.y_dev)):
+        x_all[i, :len(yd)] = xd
+        y_all[i, :len(yd)] = yd
+    return x_all, y_all, pool
+
+
+def sample_cohort_batch_traced(data_key, t: int, ds: FLDataset, device_ids,
+                               batch_sizes: np.ndarray,
+                               layout: CohortLayout) -> TieredCohortBatch:
+    """The traced data plane's host oracle: :func:`sample_cohort_batch`'s
+    tiered packing with every draw taken from the counter-based jax stream
+    (:func:`traced_batch_indices`) instead of the numpy generator.
+
+    Consumes NO host RNG — draws are a pure function of (data_key, round,
+    device) — so the stepwise loop under ``Scenario.data_plane="traced"``
+    stays bit-identical to the fused scan's in-program gathers: identical
+    indices into identical shards give byte-identical valid rows (masked
+    rows differ only in padding content, which the masked loss zeroes).
+    """
+    device_ids = [int(n) for n in device_ids]
+    assert len(device_ids) <= layout.n_slots, \
+        "more participants than cohort slots"
+    l_max = max(len(y) for y in ds.y_dev)
+    pools = np.array([len(ds.y_dev[n]) for n in device_ids], dtype=int)
+    lens = np.minimum(np.asarray(batch_sizes)[device_ids], pools) \
+        if device_ids else np.zeros(0, dtype=int)
+    sample_shape = ds.x_dev[0].shape[1:]
+    label_shape = ds.y_dev[0].shape[1:]
+    tiers = [CohortBatch(
+        np.zeros((s, w) + sample_shape, ds.x_dev[0].dtype),
+        np.zeros((s, w) + label_shape, ds.y_dev[0].dtype),
+        np.zeros((s, w), np.float32))
+        for s, w in zip(layout.tier_slots, layout.tier_widths)]
+    slot_of = np.empty(len(device_ids), dtype=int)
+    for rank, di in enumerate(np.argsort(-lens, kind="stable")):
+        k, row = layout.locate(rank)
+        n, b = device_ids[di], int(lens[di])
+        assert b <= layout.tier_widths[k], (b, layout.tier_widths[k])
+        idx = np.asarray(traced_batch_indices(
+            data_key, t, n, int(pools[di]), b, l_max))
+        tiers[k].x[row, :b] = ds.x_dev[n][idx]
+        tiers[k].y[row, :b] = ds.y_dev[n][idx]
+        tiers[k].mask[row, :b] = 1.0
+        slot_of[di] = rank
+    return TieredCohortBatch(tuple(tiers), slot_of, layout)

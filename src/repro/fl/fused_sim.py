@@ -22,13 +22,20 @@ one host replay pass:
   host, consuming ``sim.rng`` with exactly the draws the stepwise loop
   would make (the packing contract), so the fused path is RNG-bit-identical
   to stepwise. The packed per-round tensors stack into per-tier arrays
-  with a leading round axis.
+  with a leading round axis. Under ``Scenario.data_plane="traced"`` this
+  phase shrinks to *metadata only* (:func:`_pack_rounds_traced`): batches
+  are gathered in-scan from device-resident shard stacks via counter-based
+  jax draws (``repro.fl.data.traced_batch_indices``), so no per-round
+  sample copies cross the host at all.
 * **Fused train** — ONE program scans the fused cohort round over all
-  rounds (``repro.fl.cohort.train_scan``; the sharded engine's twin wraps
-  the scan in ``shard_map``), threading (params, losses) as the carry and
-  the stacked decision tensors straight from the decide scan. The
-  precision contract survives inside the pipeline: the decide program runs
-  x64 (``jax.experimental.enable_x64``), the train program f32/bf16.
+  rounds (``repro.fl.cohort.train_scan`` / ``train_scan_traced``; the
+  sharded engine's twins wrap the scan in ``shard_map``), threading
+  (params, losses) as the carry and the stacked decision tensors straight
+  from the decide scan. ``eval_every`` accuracy snapshots run
+  ``lax.cond``-gated *inside* the scan and cross back as per-round hit
+  counts. The precision contract survives inside the pipeline: the decide
+  program runs x64 (``jax.experimental.enable_x64``), the train program
+  f32/bf16.
 
 Why decide and train can be phase-separated at all: every fusable policy's
 decisions depend only on channel draws and the queue recursion — never on
@@ -43,8 +50,8 @@ Telemetry crosses back to the host once, after the scans, as a stacked
 leading round axis) and is streamed into the familiar per-round records by
 :meth:`RoundTelemetry.to_records`. Parity with the stepwise loop —
 bit-identical queues and RNG streams, params at 1e-5 — is pinned across
-{cohort, sharded} x {ddsra_jax, round_robin} x {f32, bf16} in
-``tests/test_fused_sim.py``.
+{cohort, sharded} x {ddsra_jax, round_robin, delay_driven} x {f32, bf16}
+x {host, traced} data planes in ``tests/test_fused_sim.py``.
 """
 from __future__ import annotations
 
@@ -55,7 +62,7 @@ import jax
 import numpy as np
 
 from repro.core.network import ChannelState, stack_states
-from repro.core.schedulers import RoundContext
+from repro.core.schedulers import RoundContext, make_policy
 from repro.fl.sim import (RoundRecord, Simulation, resolve_decision)
 
 
@@ -149,17 +156,29 @@ class RoundTelemetry(NamedTuple):
 
 @dataclasses.dataclass
 class SweepResult:
-    """Outcome of a seeds x V scheduling sweep run as one compiled program
-    (:meth:`repro.fl.sim.Simulation.sweep`). Row (s, v) matches a stepwise
+    """Outcome of a scheduling sweep run as one compiled program
+    (:meth:`repro.fl.sim.Simulation.sweep`).
+
+    Single-policy (``policies is None``): row (s, v) matches a stepwise
     ``reset(seeds[s])`` run of the same scenario at ``v_values[v]``
-    row-for-row: ``taus[s, v, t]`` is round t's realized delay,
+    row-for-row — ``taus[s, v, t]`` is round t's realized delay,
     ``selected``/``queues`` its participation and post-update queue state
-    (the seed-determinism test pins this, cross-process)."""
+    (the seed-determinism test pins this, cross-process). Arrays carry
+    (S, V, T[, M]) axes.
+
+    Multi-policy (``policies`` a list of traced-decide policy names): the
+    whole policies x seeds x V grid ran as ONE program
+    (``repro.core.policy_sweep``) and every array gains a leading policy
+    axis — (P, S, V, T[, M]); row (p, s, v) matches a stepwise
+    ``reset(seeds[s])`` run with ``Scenario.policy=policies[p]`` at
+    ``v_values[v]``. Fixed-resource baseline lanes ignore V, so their
+    rows repeat across the V axis (the flat curves of Figs. 4-6)."""
     seeds: List[int]
     v_values: List[float]
-    taus: np.ndarray       # (S, V, T)
-    selected: np.ndarray   # (S, V, T, M) bool
-    queues: np.ndarray     # (S, V, T, M)
+    taus: np.ndarray       # ([P,] S, V, T)
+    selected: np.ndarray   # ([P,] S, V, T, M) bool
+    queues: np.ndarray     # ([P,] S, V, T, M)
+    policies: Optional[List[str]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -197,9 +216,12 @@ def _decide(sim: Simulation, policy, states: List[ChannelState], t0: int):
         if hasattr(policy, "traced_chosen"):
             # fixed-resource baselines: gateway picks are data — drawn /
             # computed host-side (preserving the stepwise policy-RNG
-            # stream) and fed to the scan as its round axis
-            kwargs["chosen"] = policy.traced_chosen(t0, len(states),
-                                                    sim.net)
+            # stream) and fed to the scan as its round axis. delay_driven
+            # returns None (its pick depends on the round's channel draws)
+            # and decide_scan computes the greedy pick in-scan instead.
+            chosen = policy.traced_chosen(t0, len(states), sim.net)
+            if chosen is not None:
+                kwargs["chosen"] = chosen
         dec = plan.decide_scan(stack_states(states), sim.queues,
                                sim.gamma, sc.v, **kwargs)
         return (np.asarray(dec.selected), np.asarray(dec.trained),
@@ -297,6 +319,56 @@ def _replay_batches(sim: Simulation, trained_mask: np.ndarray,
     return stacked
 
 
+def _pack_rounds_traced(sim: Simulation, trained_mask: np.ndarray,
+                        l_rounds: np.ndarray):
+    """The traced data plane's phase B: pack only round *metadata*.
+
+    ``_pack_round_meta`` assigns slots without drawing a single sample —
+    the fused scan gathers every batch in-program from the device-resident
+    shard stacks via the counter-based draws — so this stacks a few int32/
+    float32 per slot per round instead of ``(T, S_k, W_k, ...)`` sample
+    buffers (the copy the host data plane pays per round disappears).
+
+    Returns (slot_devs, ls, ws, gws, layout): per-tier tuples of
+    ``(T, S_k[, M])`` arrays plus the (fixed) layout.
+    """
+    T = trained_mask.shape[0]
+    layout0 = None
+    stacked = None
+    for k in range(T):
+        trained = [int(m) for m in np.where(trained_mask[k])[0]]
+        _, layout, slot_dev, l_slot, w_slot, slot_gw, real = \
+            sim.engine._pack_round_meta(sim, trained, l_rounds[k])
+        if layout0 is None:
+            layout0 = layout
+        elif layout is not layout0:
+            raise RuntimeError(
+                "cohort layout changed across rounds (capacity fallback); "
+                "the fused scan needs fixed shapes — use "
+                "Simulation.rounds()")
+        if trained:  # stepwise accounting only touches training rounds
+            sim.padding_stats["real_samples"] += float(real)
+            sim.padding_stats["padded_samples"] += float(
+                layout.padded_samples)
+        sizes = tuple(layout.tier_slots)
+        if stacked is None:
+            stacked = (
+                tuple(np.empty((T, s), np.int32) for s in sizes),
+                tuple(np.empty((T, s), np.int32) for s in sizes),
+                tuple(np.empty((T, s), np.float32) for s in sizes),
+                tuple(np.empty((T, s) + np.shape(slot_gw)[1:], np.float32)
+                      for s in sizes))
+        sds, ls, ws, gws = stacked
+        off = 0
+        for i, s in enumerate(sizes):
+            sds[i][k] = slot_dev[off:off + s]
+            ls[i][k] = l_slot[off:off + s]
+            ws[i][k] = w_slot[off:off + s]
+            gws[i][k] = slot_gw[off:off + s]
+            off += s
+    return stacked + (layout0,)
+
+
 # ---------------------------------------------------------------------------
 # the fused round loop
 # ---------------------------------------------------------------------------
@@ -324,14 +396,28 @@ def fused_rounds(sim: Simulation, policy, *,
     selected, trained_mask, l_rounds, delay, failures, queues = _decide(
         sim, policy, states, t0)
 
-    # phase B: exact-RNG batch replay + stacking
-    xs, ys, masks, ls, ws, gws = _replay_batches(sim, trained_mask,
-                                                 l_rounds)
+    # the stepwise eval_every schedule, evaluated lax.cond-gated *inside*
+    # the train scan (repro.fl.cohort._eval_hits)
+    ts = t0 + np.arange(T)
+    eval_mask = ((ts + 1) % sc.eval_every == 0) | (ts == sc.rounds - 1)
 
-    # phase C: one training program for all rounds
-    params, losses, loss_hist = sim.engine.fused_train(
-        sim, sim.params, sim.losses, xs, ys, masks, ls, ws, gws,
-        trained_mask)
+    if sc.data_plane == "traced":
+        # phases B+C, traced plane: pack metadata only; the scan gathers
+        # every round's batches in-program via the counter-based draws
+        slot_devs, ls, ws, gws, layout = _pack_rounds_traced(
+            sim, trained_mask, l_rounds)
+        params, losses, loss_hist, hits = sim.engine.fused_train_traced(
+            sim, sim.params, sim.losses, ts, slot_devs, ls, ws, gws,
+            trained_mask, eval_mask, layout)
+    else:
+        # phase B: exact-RNG batch replay + stacking
+        xs, ys, masks, ls, ws, gws = _replay_batches(sim, trained_mask,
+                                                     l_rounds)
+
+        # phase C: one training program for all rounds
+        params, losses, loss_hist, hits = sim.engine.fused_train(
+            sim, sim.params, sim.losses, xs, ys, masks, ls, ws, gws,
+            trained_mask, eval_mask)
 
     cum = sim.delay_sum + np.cumsum(np.asarray(delay, np.float64))
     tel = RoundTelemetry(
@@ -358,12 +444,13 @@ def fused_rounds(sim: Simulation, policy, *,
     sim.t = t0 + T
     sim.delay_sum = float(cum[-1])
 
-    # final-round eval only: intermediate accuracies would need param
-    # snapshots inside the scan (records keep accuracy=None elsewhere).
-    last_t = records[-1].t
-    if (last_t + 1) % sc.eval_every == 0 or last_t == sc.rounds - 1:
-        records[-1].accuracy = sim.plan.accuracy(
-            sim.params, sim.ds.x_test, sim.ds.y_test)
+    # in-scan eval: hit counts crossed the host with the telemetry; turn
+    # them into the stepwise loop's accuracy numbers (hits / test size —
+    # exact, SplitModel.accuracy's chunking does not change integer hits)
+    n_test = max(int(np.size(np.asarray(sim.ds.y_test))), 1)
+    for r, h in zip(records, np.asarray(hits)):
+        if h >= 0:
+            r.accuracy = float(int(h)) / n_test
     return records
 
 
@@ -392,15 +479,60 @@ def _seed_states(sim: Simulation, seed: int, rounds: int
 
 
 def sweep(sim: Simulation, v_values, seeds=None, *,
-          rounds: Optional[int] = None) -> SweepResult:
-    """Run a seeds x V scheduling sweep as ONE compiled program.
+          rounds: Optional[int] = None,
+          policies: Optional[List[str]] = None) -> SweepResult:
+    """Run a scheduling sweep as ONE compiled program.
 
-    Resolves the scenario policy, which must be traced-decide
-    (``ddsra_jax``); draws each seed's channel trajectory host-side under
-    the reset(seed) contract; stacks them (S, T, ...) and hands off to
-    :meth:`DDSRAPlan.sweep_states` — vmap(seeds) o vmap(V) o scan(rounds).
-    All V lanes of a seed share its channel draws (fair-sweep contract).
+    ``policies=None`` (the classic V-sweep): resolves the scenario policy,
+    which must be traced-decide (``ddsra_jax``); draws each seed's channel
+    trajectory host-side under the reset(seed) contract; stacks them
+    (S, T, ...) and hands off to :meth:`DDSRAPlan.sweep_states` —
+    vmap(seeds) o vmap(V) o scan(rounds). All V lanes of a seed share its
+    channel draws (fair-sweep contract).
+
+    ``policies=[...]`` (the Figs. 4-6 grid): every named traced-decide
+    policy becomes a lane of one ``lax.switch`` branch axis and the whole
+    policies x seeds x V grid runs as a single XLA program
+    (``repro.core.policy_sweep``). All policy lanes of a seed share its
+    channel draws, and ``random``'s picks are pre-drawn per seed from the
+    same policy-RNG stream a stepwise ``reset(seed)`` run would consume.
     """
+    T = sim.scenario.rounds if rounds is None else rounds
+    seeds = [sim.scenario.seed] if seeds is None else [int(s) for s in seeds]
+
+    if policies is not None:
+        from repro.core import policy_sweep as ps
+        from repro.core.baseline_jax import BaselinePlan
+        bad = [p for p in policies if p not in ps.POLICY_KINDS]
+        if bad:
+            raise ValueError(
+                f"policies {bad!r} cannot ride the fused sweep (host-loop "
+                f"decide); traced-decide policies: "
+                f"{sorted(ps.POLICY_KINDS)} — use Simulation.rounds() for "
+                "the rest")
+        plan = BaselinePlan.build(sim.workload, sim.net)
+        per_seed = [stack_states(_seed_states(sim, s, T)) for s in seeds]
+        stacked = jax.tree.map(lambda *a: np.stack(a), *per_seed)
+        kinds = np.array([ps.POLICY_KINDS[p] for p in policies], np.int32)
+        j_ch = sim.net.cfg.n_channels
+        chosen = np.zeros((len(policies), len(seeds), T, j_ch), np.int32)
+        for pi, name in enumerate(policies):
+            if ps.POLICY_KINDS[name] != 1:
+                continue
+            for si, s in enumerate(seeds):
+                # fresh per-seed policy instance == the stepwise
+                # reset(seed) contract (make_policy reseeds from run_seed)
+                pol = make_policy(name, seed=s)
+                chosen[pi, si] = pol.traced_chosen(0, T, sim.net)
+        taus, sel, queues = ps.sweep_policies(
+            plan.statics, stacked, sim.gamma, list(map(float, v_values)),
+            kinds, chosen, l0=plan.l0, n_devices=plan.n_devices,
+            n_gateways=plan.n_gateways)
+        return SweepResult(seeds=seeds,
+                           v_values=[float(v) for v in v_values],
+                           taus=taus, selected=sel, queues=queues,
+                           policies=list(policies))
+
     policy = sim._resolve_policy(None)
     if not getattr(policy, "traced_decide", False):
         raise ValueError(
@@ -411,9 +543,8 @@ def sweep(sim: Simulation, v_values, seeds=None, *,
     if not hasattr(plan, "sweep_states"):
         raise ValueError(
             f"policy {sim.scenario.policy!r} has no V-sweep (fixed-resource "
-            "baselines ignore V); set Scenario.policy='ddsra_jax'")
-    T = sim.scenario.rounds if rounds is None else rounds
-    seeds = [sim.scenario.seed] if seeds is None else [int(s) for s in seeds]
+            "baselines ignore V); set Scenario.policy='ddsra_jax' or pass "
+            "policies=[...] to sweep them on the policy axis")
     per_seed = [stack_states(_seed_states(sim, s, T)) for s in seeds]
     stacked = jax.tree.map(lambda *a: np.stack(a), *per_seed)
     taus, sel, queues = plan.sweep_states(stacked, sim.gamma,

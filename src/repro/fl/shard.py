@@ -139,16 +139,20 @@ def _train_scan_program(mesh, model: SplitModel, k_iters: int, n_tiers: int,
     rounds and the per-round FedAvg is the same masked-psum reduction the
     per-round program uses (:func:`_fedavg_psum`). Carries (params,
     per-gateway losses), applies the same no-trainer/trained-only guards as
-    the single-host scan, returns (params, losses, (T, M) loss history),
-    all replicated.
+    the single-host scan, returns (params, losses, (T, M) loss history,
+    (T,) in-scan test hits — see ``repro.fl.cohort._eval_hits``), all
+    replicated (every mesh device evaluates the replicated params on the
+    replicated test set; identical math, identical hits).
     """
 
-    def body(params, losses0, xs, ys, masks, ws, gws, trained, lr):
+    def body(params, losses0, xs, ys, masks, ws, gws, trained, lr,
+             eval_mask, x_test, y_test):
         TRACE_COUNTS["train_scan"] += 1
+        x_eval = model.prepare_inputs(x_test)
 
         def step(carry, x):
             params, losses = carry
-            xs_t, ys_t, masks_t, w_t, gw_t, tr_t = x
+            xs_t, ys_t, masks_t, w_t, gw_t, tr_t, ev_t = x
             xs_t = cohort_lib._maybe_flatten(model, xs_t)
             final_t, loss_t = cohort_lib._local_train(
                 model, params, xs_t, ys_t, masks_t, k_iters, lr,
@@ -162,16 +166,91 @@ def _train_scan_program(mesh, model: SplitModel, k_iters: int, n_tiers: int,
                 lambda new, old: jnp.where(any_trained, new, old),
                 new_global, params)
             losses = jnp.where(tr_t, gw_loss, losses)
-            return (params, losses), losses
+            hits = cohort_lib._eval_hits(model, params, x_eval, y_test,
+                                         ev_t)
+            return (params, losses), (losses, hits)
 
-        (params, losses), loss_hist = jax.lax.scan(
-            step, (params, losses0), (xs, ys, masks, ws, gws, trained))
-        return params, losses, loss_hist
+        (params, losses), (loss_hist, hits) = jax.lax.scan(
+            step, (params, losses0),
+            (xs, ys, masks, ws, gws, trained, eval_mask))
+        return params, losses, loss_hist, hits
 
     stk, rep = STACKED_SLOT_SPEC, REPLICATED
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(rep, rep, stk, stk, stk, stk, stk, rep, rep),
-                   out_specs=(rep, rep, rep),
+                   in_specs=(rep, rep, stk, stk, stk, stk, stk, rep, rep,
+                             rep, rep, rep),
+                   out_specs=(rep, rep, rep, rep),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _train_scan_program_traced(mesh, model: SplitModel, k_iters: int,
+                               n_tiers: int, compute_dtype: str,
+                               tier_widths: Tuple[int, ...]):
+    """The sharded twin of ``repro.fl.cohort.train_scan_traced``: the data
+    plane lives inside the mapped body.
+
+    The device-resident shard stacks (``x_all``/``y_all``) and the data key
+    are replicated; only each round's slot->device assignment (a few int32s
+    per slot) is sharded over the mesh, and every mesh device gathers its
+    own slots' batches in-scan via the counter-based draw
+    (``repro.fl.data.traced_batch_indices``) — so the host ships decision
+    tensors, never ``(T, S_k, W_k, ...)`` sample stacks.
+    """
+
+    def body(params, losses0, x_all, y_all, pool_lens, batch_lens, data_key,
+             ts, slot_devs, ws, gws, trained, lr, eval_mask, x_test,
+             y_test):
+        TRACE_COUNTS["train_scan"] += 1
+        x_eval = model.prepare_inputs(x_test)
+        l_max = x_all.shape[1]
+
+        def gather_tier(t, devs, width):
+            def one(dev):
+                d = jnp.maximum(dev, 0)
+                idx = cohort_lib._traced_indices(data_key, t, d,
+                                                 pool_lens[d], width, l_max)
+                mb = ((jnp.arange(width) < batch_lens[d]) & (dev >= 0)
+                      ).astype(jnp.float32)
+                return x_all[d][idx], y_all[d][idx], mb
+            return jax.vmap(one)(devs)
+
+        def step(carry, x):
+            params, losses = carry
+            t, sd_t, w_t, gw_t, tr_t, ev_t = x
+            gathered = [gather_tier(t, devs, width)
+                        for devs, width in zip(sd_t, tier_widths)]
+            xs_t = cohort_lib._maybe_flatten(
+                model, tuple(g[0] for g in gathered))
+            ys_t = tuple(g[1] for g in gathered)
+            masks_t = tuple(g[2] for g in gathered)
+            final_t, loss_t = cohort_lib._local_train(
+                model, params, xs_t, ys_t, masks_t, k_iters, lr,
+                compute_dtype)
+            final = cohort_lib._concat_tiers(final_t)   # local slots only
+            new_global, gw_loss, _, w_sum = _fedavg_psum(
+                final, jnp.concatenate(w_t), jnp.concatenate(loss_t),
+                jnp.concatenate(gw_t))
+            any_trained = w_sum > 0
+            params = jax.tree.map(
+                lambda new, old: jnp.where(any_trained, new, old),
+                new_global, params)
+            losses = jnp.where(tr_t, gw_loss, losses)
+            hits = cohort_lib._eval_hits(model, params, x_eval, y_test,
+                                         ev_t)
+            return (params, losses), (losses, hits)
+
+        (params, losses), (loss_hist, hits) = jax.lax.scan(
+            step, (params, losses0),
+            (ts, slot_devs, ws, gws, trained, eval_mask))
+        return params, losses, loss_hist, hits
+
+    stk, rep = STACKED_SLOT_SPEC, REPLICATED
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(rep, rep, rep, rep, rep, rep, rep, rep, stk,
+                             stk, stk, rep, rep, rep, rep, rep),
+                   out_specs=(rep, rep, rep, rep),
                    check_rep=False)
     return jax.jit(fn)
 
@@ -317,14 +396,42 @@ class ShardedCohortEngine(sim_lib.CohortEngine):
                                     batch, mix, sc.lr, sc.sigma_samples)
 
     def fused_train(self, sim: "sim_lib.Simulation", params, losses0, xs,
-                    ys, masks, ls, ws, gws, trained):
+                    ys, masks, ls, ws, gws, trained, eval_mask=None):
         """All rounds as one sharded program: ``shard_map(lax.scan)`` with
         each tier's slot axis split over the cohort mesh (the engine's
         layout already rounds tier slot counts to mesh multiples, so the
         stacked arrays shard evenly — no padding pass needed). ``ls`` is
         unused (no boundary telemetry inside the scan)."""
         sc = sim.scenario
+        if eval_mask is None:
+            eval_mask = np.zeros(trained.shape[0], bool)
         fn = _train_scan_program(self._mesh(sim), sim.plan, sc.k_iters,
                                  len(xs), sc.dtype)
+        x_test, y_test = self._eval_arrays(sim)
         return fn(params, jnp.asarray(np.asarray(losses0), jnp.float32),
-                  xs, ys, masks, ws, gws, trained, jnp.float32(sc.lr))
+                  xs, ys, masks, ws, gws, trained, jnp.float32(sc.lr),
+                  jnp.asarray(np.asarray(eval_mask, bool)),
+                  x_test, y_test)
+
+    def fused_train_traced(self, sim: "sim_lib.Simulation", params, losses0,
+                           ts, slot_devs, ls, ws, gws, trained, eval_mask,
+                           layout):
+        """The traced-data-plane whole-run program, sharded: replicated
+        shard stacks + mesh-sharded slot assignments (see
+        :func:`_train_scan_program_traced`). ``ls`` is unused, as in
+        :meth:`fused_train`."""
+        sc = sim.scenario
+        x_all, y_all, pool = self._data_stacks(sim)
+        batch_lens = np.minimum(
+            np.asarray(sim.d_tilde, np.int32), pool).astype(np.int32)
+        fn = _train_scan_program_traced(
+            self._mesh(sim), sim.plan, sc.k_iters, len(slot_devs), sc.dtype,
+            tuple(layout.tier_widths))
+        x_test, y_test = self._eval_arrays(sim)
+        return fn(params, jnp.asarray(np.asarray(losses0), jnp.float32),
+                  x_all, y_all, jnp.asarray(pool),
+                  jnp.asarray(batch_lens), sim.data_key,
+                  jnp.asarray(np.asarray(ts, np.int32)), slot_devs, ws, gws,
+                  trained, jnp.float32(sc.lr),
+                  jnp.asarray(np.asarray(eval_mask, bool)),
+                  x_test, y_test)

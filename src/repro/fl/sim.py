@@ -39,6 +39,7 @@ import warnings
 from typing import Dict, Iterator, List, Optional, Tuple, Type, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import store
@@ -52,9 +53,10 @@ from repro.core.schedulers import (POLICIES, RoundContext, make_policy,
                                    policy_state, set_policy_state)
 from repro.fl import cohort as cohort_lib
 from repro.fl import split as split_lib
-from repro.fl.data import (CohortLayout, make_fl_dataset,
-                           make_token_fl_dataset, sample_batch,
-                           sample_cohort_batch)
+from repro.fl.data import (CohortLayout, device_resident_stacks,
+                           make_fl_dataset, make_token_fl_dataset,
+                           sample_batch, sample_cohort_batch,
+                           sample_cohort_batch_traced)
 from repro.fl.faults import FaultModel
 from repro.fl.roles import BaseStation, Device, Gateway
 from repro.models import registry as model_registry
@@ -104,6 +106,11 @@ class Scenario:
     # mixed-precision data plane: "f32" (default) or "bf16" (bf16 storage/
     # GEMMs with f32 master params + f32 accumulation; cohort engines only)
     dtype: str = "f32"
+    # where training batches are drawn: "host" (numpy RNG draws replayed /
+    # pre-packed per round) or "traced" (counter-based jax draws gathered
+    # from device-resident shard stacks — inside the scan on the fused
+    # path; cohort engines only, see repro.fl.data.traced_batch_indices)
+    data_plane: str = "host"
     # model-upload compression: bits per parameter priced into the DDSRA
     # upload-delay/energy terms (None = the model's native precision;
     # dtype="bf16" implies 16 unless overridden — e.g. 8 for int8 uploads)
@@ -335,6 +342,11 @@ class Engine:
     # simulation loop, ``repro.fl.fused_sim``); engines without it are
     # refused up front, before any RNG stream is consumed.
     supports_fused: bool = False
+    # whether the engine honors ``Scenario.data_plane="traced"`` (counter-
+    # based jax batch draws instead of the host numpy stream); Simulation
+    # rejects traced-plane scenarios on engines that would silently keep
+    # sampling host-side (the two planes draw different batches).
+    supports_traced_data: bool = False
 
     def estimate_stats(self, sim: "Simulation", params) -> DataStats:
         """Estimate the per-device sigma_n/delta_n/L_n statistics the
@@ -373,14 +385,16 @@ class Engine:
         return None
 
     def fused_train(self, sim: "Simulation", params, losses0, xs, ys,
-                    masks, ls, ws, gws, trained):
+                    masks, ls, ws, gws, trained, eval_mask=None):
         """Run a whole pre-packed training trajectory as one compiled
         program (the fused simulation loop, ``repro.fl.fused_sim``).
 
         ``xs/ys/masks/ls/ws/gws`` are per-tier tuples with a leading round
         axis (tier k: ``(T, S_k, ...)``), ``trained`` the (T, M) bool
-        trained-gateway mask. Returns (final params, final (M,) losses,
-        (T, M) per-round loss history). Engines without a scan-compatible
+        trained-gateway mask, ``eval_mask`` the (T,) bool ``eval_every``
+        schedule (None = never evaluate). Returns (final params, final
+        (M,) losses, (T, M) per-round loss history, (T,) in-scan test
+        hits — -1 on non-eval rounds). Engines without a scan-compatible
         round (the sequential loop, the buffered async engine) raise —
         ``Simulation.rounds()`` is their only path.
         """
@@ -423,6 +437,7 @@ class CohortEngine(Engine):
 
     supported_dtypes = ("f32", "bf16")
     supports_fused = True
+    supports_traced_data = True
 
     def _shard_count(self, sim: "Simulation") -> int:
         """Multiple each tier's slot count must divide into (the cohort
@@ -490,8 +505,16 @@ class CohortEngine(Engine):
         cap = sim.cohort_capacity if len(device_ids) <= sim.cohort_capacity \
             else sim.net.cfg.n_devices
         layout = self._layout(sim, cap)
-        batch = sample_cohort_batch(sim.rng, sim.ds, device_ids,
-                                    sim.d_tilde, layout=layout)
+        if sim.scenario.data_plane == "traced":
+            # counter-based jax draws (a pure function of (data_key, round,
+            # device)) — no host RNG consumed, bit-identical to the fused
+            # scan's in-program gathers
+            batch = sample_cohort_batch_traced(sim.data_key, sim.t, sim.ds,
+                                               device_ids, sim.d_tilde,
+                                               layout=layout)
+        else:
+            batch = sample_cohort_batch(sim.rng, sim.ds, device_ids,
+                                        sim.d_tilde, layout=layout)
         n_slots = layout.n_slots
         l_slot = np.zeros(n_slots, int)
         w_slot = np.zeros(n_slots, np.float32)
@@ -530,14 +553,100 @@ class CohortEngine(Engine):
         return None
 
     def fused_train(self, sim: "Simulation", params, losses0, xs, ys,
-                    masks, ls, ws, gws, trained):
+                    masks, ls, ws, gws, trained, eval_mask=None):
         """All rounds as one program: ``lax.scan`` of the fused round
         (``repro.fl.cohort.train_scan``) over the stacked packed batches
         and decision tensors."""
         sc = sim.scenario
+        if eval_mask is None:
+            eval_mask = np.zeros(np.asarray(trained).shape[0], bool)
+        x_test, y_test = self._eval_arrays(sim)
         return cohort_lib.train_scan(
             sim.plan, params, losses0, xs, ys, masks, ls, ws, gws, trained,
-            np.float32(sc.lr), k_iters=sc.k_iters, compute_dtype=sc.dtype)
+            np.float32(sc.lr), np.asarray(eval_mask, bool),
+            x_test, y_test,
+            k_iters=sc.k_iters, compute_dtype=sc.dtype)
+
+    def _pack_round_meta(self, sim: "Simulation", trained: List[int],
+                         l_n: np.ndarray):
+        """:meth:`_pack_round`'s slot assignment WITHOUT sampling any data
+        — the traced data plane's packing: the fused scan gathers each
+        slot's batch in-program from its device id, so the host only ships
+        this round's (slot -> device, l, weight, gateway) metadata.
+
+        Slot ranks replicate ``sample_cohort_batch_traced``'s assignment
+        exactly (same stable argsort over the same clipped batch lengths),
+        so per-slot outputs scatter back to devices identically on both
+        paths. Returns (device_ids, layout, slot_dev (-1 = empty slot),
+        l_slot, w_slot, slot_gw, real_samples).
+        """
+        device_ids: List[int] = []
+        for m in trained:
+            device_ids.extend(dev.idx for dev in sim.gateways[m].devices)
+        cap = sim.cohort_capacity if len(device_ids) <= sim.cohort_capacity \
+            else sim.net.cfg.n_devices
+        layout = self._layout(sim, cap)
+        pools = np.array([len(sim.ds.y_dev[n]) for n in device_ids],
+                         dtype=int)
+        lens = np.minimum(sim.d_tilde[device_ids], pools) if device_ids \
+            else np.zeros(0, dtype=int)
+        n_slots = layout.n_slots
+        slot_dev = np.full(n_slots, -1, np.int32)
+        l_slot = np.zeros(n_slots, int)
+        w_slot = np.zeros(n_slots, np.float32)
+        slot_gw = np.zeros((n_slots, sim.net.cfg.n_gateways), np.float32)
+        for rank, di in enumerate(np.argsort(-lens, kind="stable")):
+            n = device_ids[di]
+            slot_dev[rank] = n
+            l_slot[rank] = l_n[n]
+            w_slot[rank] = sim.d_tilde[n]
+            slot_gw[rank, sim.net.assign[n]] = 1.0
+        return (device_ids, layout, slot_dev, l_slot, w_slot, slot_gw,
+                int(lens.sum()))
+
+    def _data_stacks(self, sim: "Simulation"):
+        """The (lazily-built, cached) device-resident shard stacks the
+        traced data plane gathers from (``repro.fl.data
+        .device_resident_stacks``); the dataset is fixed per Simulation,
+        so the cache survives reset/restart. The x/y stacks are committed
+        to device here — caching host arrays would re-transfer the full
+        pool (tens of MB) on every fused call, a fixed cost that dwarfs
+        the scan itself; ``pool`` stays numpy for host-side arithmetic."""
+        if getattr(sim, "_resident_stacks", None) is None:
+            x_all, y_all, pool = device_resident_stacks(sim.ds)
+            sim._resident_stacks = (jnp.asarray(x_all), jnp.asarray(y_all),
+                                    pool)
+        return sim._resident_stacks
+
+    def _eval_arrays(self, sim: "Simulation"):
+        """Device-committed (x_test, y_test), cached for the same reason
+        as :meth:`_data_stacks`."""
+        if getattr(sim, "_resident_eval", None) is None:
+            sim._resident_eval = (jnp.asarray(sim.ds.x_test),
+                                  jnp.asarray(sim.ds.y_test))
+        return sim._resident_eval
+
+    def fused_train_traced(self, sim: "Simulation", params, losses0, ts,
+                           slot_devs, ls, ws, gws, trained, eval_mask,
+                           layout):
+        """All rounds as one program with the data plane *inside* it:
+        ``repro.fl.cohort.train_scan_traced`` gathers every round's batches
+        in-scan from the device-resident shard stacks, so the host never
+        materializes the ``(T, S_k, W_k, ...)`` sample stacks
+        :meth:`fused_train` is fed. ``slot_devs/ls/ws/gws`` are per-tier
+        tuples with a leading round axis; ``ts`` the absolute round
+        indices the counter-based draws fold in."""
+        sc = sim.scenario
+        x_all, y_all, pool = self._data_stacks(sim)
+        batch_lens = np.minimum(
+            np.asarray(sim.d_tilde, np.int32), pool).astype(np.int32)
+        x_test, y_test = self._eval_arrays(sim)
+        return cohort_lib.train_scan_traced(
+            sim.plan, params, losses0, x_all, y_all, pool, batch_lens,
+            sim.data_key, np.asarray(ts, np.int32), slot_devs, ls, ws, gws,
+            trained, np.float32(sc.lr), np.asarray(eval_mask, bool),
+            x_test, y_test, k_iters=sc.k_iters,
+            compute_dtype=sc.dtype, tier_widths=tuple(layout.tier_widths))
 
     def shop_floor_round(self, sim: "Simulation", device_ids: List[int],
                          l_n: np.ndarray, params=None,
@@ -704,6 +813,15 @@ class Simulation:
             raise ValueError(
                 f"engine {sc.engine!r} supports dtypes "
                 f"{self.engine.supported_dtypes}, not {sc.dtype!r}")
+        if sc.data_plane not in ("host", "traced"):
+            raise ValueError(
+                f"Scenario.data_plane={sc.data_plane!r}: expected 'host' "
+                "or 'traced'")
+        if sc.data_plane == "traced" and \
+                not self.engine.supports_traced_data:
+            raise ValueError(
+                f"engine {sc.engine!r} samples batches host-side: it "
+                "cannot honor data_plane='traced'; use a cohort engine")
         if sc.buffer_k is not None and sc.buffer_k < 1:
             raise ValueError(f"Scenario.buffer_k must be >= 1 or None, "
                              f"got {sc.buffer_k}")
@@ -803,6 +921,15 @@ class Simulation:
     @params.setter
     def params(self, value):
         self.bs.params = value
+
+    @property
+    def data_key(self):
+        """Root key of the traced data plane's counter-based batch draws
+        (``repro.fl.data.traced_batch_indices``). Derived from the run
+        seed — one step past the batch-RNG seed (``seed + 1``) and the
+        channel-RNG seed (``seed``) — so ``reset(seed)`` and checkpoint
+        resume re-derive it with no extra state to save."""
+        return jax.random.PRNGKey(self.run_seed + 2)
 
     def restart(self) -> None:
         """Reset the *run* state (round counter, queues, losses, delay) while
@@ -980,20 +1107,25 @@ class Simulation:
         return self.result_of(records)
 
     def sweep(self, v_values, seeds=None, *,
-              rounds: Optional[int] = None):
-        """Run a seeds x V scheduling sweep as a single compiled program.
+              rounds: Optional[int] = None, policies=None):
+        """Run a scheduling sweep as a single compiled program.
 
         Draws each seed's channel trajectory host-side under the
         ``reset(seed)`` fairness contract (so sweep lane (s, v) sees
         exactly the ChannelStates a stepwise ``reset(s)`` run at that V
-        would), stacks them, and runs
-        ``repro.core.ddsra_jax.DDSRAPlan.sweep_states`` — vmap over seeds,
-        vmap over V (lanes share a seed's draws), ``lax.scan`` over
-        rounds. Returns a ``repro.fl.fused_sim.SweepResult``; requires a
-        traced-decide policy (the scenario policy or ``ddsra_jax``).
+        would), stacks them, and fuses the grid: with ``policies=None``
+        runs ``repro.core.ddsra_jax.DDSRAPlan.sweep_states`` — vmap over
+        seeds, vmap over V (lanes share a seed's draws), ``lax.scan`` over
+        rounds — which requires a traced-decide scenario policy
+        (``ddsra_jax``). With ``policies=[...]`` (traced-decide policy
+        names) a one-hot policy axis joins the grid and the whole
+        policies x seeds x V sweep runs as ONE program
+        (``repro.core.policy_sweep`` — the Figs. 4-6 comparison). Returns
+        a ``repro.fl.fused_sim.SweepResult``.
         """
         from repro.fl import fused_sim
-        return fused_sim.sweep(self, v_values, seeds=seeds, rounds=rounds)
+        return fused_sim.sweep(self, v_values, seeds=seeds, rounds=rounds,
+                               policies=policies)
 
     def result_of(self, records: List[RoundRecord]) -> FLResult:
         """Fold a list of streamed RoundRecords into an :class:`FLResult`."""

@@ -1,7 +1,28 @@
-"""Jit'd public wrapper for the SSD scan kernel."""
+"""Differentiable public wrappers for the SSD chunked-scan kernel.
+
+Mirrors the flash-attention op layer: one ``impl`` switch selects
+
+* ``"pallas"``    — the compiled Pallas forward kernel (``kernel.py``),
+* ``"interpret"`` — the same kernel under ``interpret=True`` (CI path),
+* ``"ref"``       — the pure-jnp sequential oracle (``ref.py``).
+
+All three run through a single ``jax.custom_vjp`` named ``ssd_scan_vjp``
+(the name the training jaxpr pins on). There is no hand-written backward
+kernel: the VJP saves the five inputs as residuals and backpropagates by
+recomputing through :func:`~repro.kernels.ssd_scan.ref.ssd_ref` — the
+sequential recurrence is the numerically exact adjoint of every impl, and
+its ``lax.scan`` reverse pass keeps memory at O(S) states. That makes the
+Pallas forward usable inside ``jax.grad`` (split training), which the bare
+``pallas_call`` is not.
+
+The default impl comes from ``REPRO_SSD_SCAN_IMPL`` when set
+(``pallas`` / ``interpret`` / ``ref``), else ``pallas`` on TPU and ``ref``
+elsewhere — the same contract as ``REPRO_FLASH_ATTENTION_IMPL``.
+"""
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -10,24 +31,75 @@ from repro.kernels import autotune
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
 
+_IMPLS = ("pallas", "interpret", "ref")
+_ENV_VAR = "REPRO_SSD_SCAN_IMPL"
+
+
+def default_impl() -> str:
+    """Resolve the SSD impl: env override, else backend heuristic."""
+    env = os.environ.get(_ENV_VAR)
+    if env is not None:
+        if env not in _IMPLS:
+            raise ValueError(
+                f"{_ENV_VAR}={env!r} invalid; expected one of {_IMPLS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def ssd_scan_vjp(chunk, block_h, impl, xh, dt, a_log, b_ssm, c_ssm):
+    out, _ = _ssd_fwd(chunk, block_h, impl, xh, dt, a_log, b_ssm, c_ssm)
+    return out
+
+
+def _ssd_fwd(chunk, block_h, impl, xh, dt, a_log, b_ssm, c_ssm):
+    if impl == "ref":
+        y = ssd_ref(xh, dt, a_log, b_ssm, c_ssm)
+    else:
+        y = ssd_scan(xh, dt, a_log, b_ssm, c_ssm, chunk=chunk,
+                     block_h=block_h, interpret=(impl == "interpret"))
+    return y, (xh, dt, a_log, b_ssm, c_ssm)
+
+
+def _ssd_bwd(chunk, block_h, impl, res, dy):
+    # one backward for every impl: recompute through the sequential oracle
+    # (exact — the kernels are validated against it bit-for-bit in f32)
+    _, vjp = jax.vjp(ssd_ref, *res)
+    return vjp(dy)
+
+
+ssd_scan_vjp.defvjp(_ssd_fwd, _ssd_bwd)
+
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_h", "interpret",
-                                             "use_pallas"))
+                                             "use_pallas", "impl"))
 def ssd(xh, dt, a_log, b_ssm, c_ssm, *, chunk: Optional[int] = None,
         block_h: Optional[int] = None, interpret: bool = False,
-        use_pallas: bool = True):
-    """Chunked SSD scan; ``chunk``/``block_h`` default to the
-    kernel-selection table (``repro.kernels.autotune.blocks_for`` on the
-    (B, S, n, p, ds) shape; clamped heuristic on a miss) — pass them
-    explicitly to override."""
-    if not use_pallas:
-        return ssd_ref(xh, dt, a_log, b_ssm, c_ssm)
+        use_pallas: bool = True, impl: Optional[str] = None):
+    """Differentiable chunked SSD scan.
+
+    ``impl`` overrides the legacy ``use_pallas``/``interpret`` flags when
+    given; ``chunk``/``block_h`` default to the kernel-selection table
+    (``repro.kernels.autotune.blocks_for`` on the (B, S, n, p, ds) shape;
+    clamped heuristic on a miss) — pass them explicitly to override. Every
+    impl dispatches through the ``ssd_scan_vjp`` custom VJP, so the Pallas
+    forward participates in ``jax.grad`` (the routing pin in
+    ``tests/test_split_models.py`` walks the jaxpr for it).
+    """
+    if impl is None:
+        impl = ("interpret" if interpret else "pallas") if use_pallas \
+            else "ref"
+    if impl not in _IMPLS:
+        raise ValueError(f"impl={impl!r}; expected one of {_IMPLS}")
     if chunk is None or block_h is None:
         bsz, s, n, p = xh.shape
         tc, th = autotune.blocks_for("ssd_scan", (bsz, s, n, p,
                                                   b_ssm.shape[-1]),
-                                     str(xh.dtype), interpret=interpret)
+                                     str(xh.dtype),
+                                     interpret=(impl != "pallas"))
         chunk = tc if chunk is None else chunk
         block_h = th if block_h is None else block_h
-    return ssd_scan(xh, dt, a_log, b_ssm, c_ssm, chunk=chunk,
-                    block_h=block_h, interpret=interpret)
+    bsz, s, n, p = xh.shape
+    chunk = min(chunk, s)
+    block_h = min(block_h, n)
+    return ssd_scan_vjp(chunk, block_h, impl, xh, dt, a_log, b_ssm, c_ssm)

@@ -124,12 +124,19 @@ def mamba_block(x: jax.Array, params: Dict[str, jax.Array], cfg: ArchConfig,
 
     xh = xin.reshape(bsz, s, n, p)
     be = backend.current()
-    if (be.pallas and h0 is None and not return_state
+    # kernel routing: the backend switch picks pallas/interpret; otherwise
+    # the env-resolved default (REPRO_SSD_SCAN_IMPL) decides. The "ref"
+    # default keeps the chunked dual form below — same math, no op layer —
+    # while any kernel impl dispatches through the ssd_scan_vjp custom VJP
+    # (differentiable: backward recomputes via the sequential oracle).
+    from repro.kernels.ssd_scan import ops as ssd_ops
+    impl = (("interpret" if be.interpret else "pallas") if be.pallas
+            else ssd_ops.default_impl())
+    if (impl != "ref" and h0 is None and not return_state
             and backend.ssd_ok(s, n, s_cfg.chunk_size, be.ssd_block_h)):
-        from repro.kernels.ssd_scan.ops import ssd as ssd_kernel
-        y = ssd_kernel(xh, dt, params["a_log"], b_ssm, c_ssm,
-                       chunk=min(s_cfg.chunk_size, s),
-                       block_h=min(be.ssd_block_h, n), interpret=be.interpret)
+        y = ssd_ops.ssd(xh, dt, params["a_log"], b_ssm, c_ssm,
+                        chunk=min(s_cfg.chunk_size, s),
+                        block_h=min(be.ssd_block_h, n), impl=impl)
         h = None
     else:
         y, h = ssd_chunked(xh, dt, params["a_log"], b_ssm, c_ssm,

@@ -10,7 +10,7 @@ import pytest
 
 from repro.core.hungarian import hungarian_min
 from repro.fl import cohort as cohort_lib
-from repro.fl import FLConfig, FLTrainer
+from repro.fl import FLConfig, FLTrainer, Scenario, Simulation
 from repro.fl.data import make_fl_dataset, sample_cohort_batch
 from repro.fl.roles import Device, Gateway, fedavg
 from repro.kernels.fused_linear import ops as fused_ops
@@ -212,6 +212,46 @@ def test_fused_linear_custom_vjp_under_vmap():
 # ---------------------------------------------------------------------------
 # hungarian: vectorized column scan vs brute force (no hypothesis needed)
 # ---------------------------------------------------------------------------
+
+
+def test_tokens_bf16_round_parity():
+    """Mixed precision on the ``input_kind="tokens"`` data plane: int32
+    token batches must pass through ``_cast_floats`` untouched (only
+    float leaves — params, activations — drop to bf16), so a bf16
+    transformer round agrees with its f32 twin at bf16-storage
+    tolerance, and the control plane (selection, delays, queues) is
+    bit-identical — compute dtype never leaks into scheduling. Upload
+    bits are pinned (dtype="bf16" alone would price uploads at 16 bits
+    and legitimately change the delays) so the only varying input IS the
+    compute dtype."""
+    def run(dtype):
+        sc = Scenario(model="transformer", seq_len=8, rounds=2, k_iters=1,
+                      eval_every=1, alpha=0.2, max_dataset=400, seed=0,
+                      policy="ddsra_jax", engine="cohort", dtype=dtype,
+                      upload_bits=32)
+        sim = Simulation(sc)
+        assert sim.plan.input_kind == "tokens"
+        assert all(x.dtype == np.int32 for x in sim.ds.x_dev)
+        recs = list(sim.rounds())
+        return sim, recs
+
+    sim32, recs32 = run("f32")
+    sim16, recs16 = run("bf16")
+    for a, b in zip(recs32, recs16):
+        np.testing.assert_array_equal(b.selected, a.selected)
+        assert list(b.trained) == list(a.trained)
+        assert b.delay == pytest.approx(a.delay, rel=1e-12)
+        np.testing.assert_allclose(b.queues, a.queues, atol=1e-12)
+        # losses re-converge within bf16 resolution (~8 mantissa bits)
+        np.testing.assert_allclose(
+            np.asarray(b.losses), np.asarray(a.losses), rtol=0.05, atol=0.05)
+        assert b.accuracy == pytest.approx(a.accuracy, abs=0.1)
+    # master params stay f32 in both runs and drift only by bf16 rounding
+    for l32, l16 in zip(jax.tree.leaves(sim32.params),
+                        jax.tree.leaves(sim16.params)):
+        assert l16.dtype == l32.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(l16), np.asarray(l32),
+                                   rtol=0.1, atol=0.02)
 
 
 def test_hungarian_vectorized_matches_bruteforce():

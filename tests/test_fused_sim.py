@@ -1,7 +1,8 @@
 """The fused simulation loop vs the stepwise round loop.
 
 Parity contract (pinned here, required by ``repro.fl.fused_sim``): across
-{cohort, sharded} x {ddsra_jax, round_robin} x {f32, bf16}, the fused path
+{cohort, sharded} x {ddsra_jax, round_robin, delay_driven} x {f32, bf16}
+x {host, traced} data planes, the fused path
 reproduces the stepwise loop's RoundRecord stream and end state with
 bit-identical queues and RNG streams (both the channel and the batch
 stream) and params within atol 1e-5 — including when a checkpoint is saved
@@ -21,7 +22,7 @@ import pytest
 
 import jax
 
-from repro.core import ddsra_jax
+from repro.core import ddsra_jax, policy_sweep
 from repro.core.network import NetworkConfig
 from repro.fl import cohort as cohort_lib
 from repro.fl import fused_sim
@@ -78,7 +79,8 @@ def _assert_end_state_parity(sim_a, sim_b, *, atol=1e-5):
 
 
 @pytest.mark.parametrize("engine", ["cohort", "sharded"])
-@pytest.mark.parametrize("policy", ["ddsra_jax", "round_robin"])
+@pytest.mark.parametrize("policy", ["ddsra_jax", "round_robin",
+                                    "delay_driven"])
 @pytest.mark.parametrize("dtype", ["f32", "bf16"])
 def test_fused_matches_stepwise(engine, policy, dtype):
     sc = _scenario(engine=engine, policy=policy, dtype=dtype)
@@ -89,17 +91,86 @@ def test_fused_matches_stepwise(engine, policy, dtype):
     _assert_end_state_parity(sim_a, sim_b)
 
 
-def test_fused_final_round_accuracy_matches_stepwise():
-    """The one in-scan eval the fused path reports (the final round) equals
-    the stepwise eval on the same end params."""
-    sc = _scenario(policy="ddsra_jax", eval_every=5)
+def _assert_accuracy_parity(recs_a, recs_b):
+    for a, b in zip(recs_a, recs_b):
+        assert (a.accuracy is None) == (b.accuracy is None), a.t
+        if a.accuracy is not None:
+            assert b.accuracy == pytest.approx(a.accuracy, abs=1e-6), a.t
+
+
+@pytest.mark.parametrize("engine", ["cohort", "sharded"])
+def test_fused_in_scan_eval_matches_stepwise(engine):
+    """``eval_every`` accuracy snapshots run lax.cond-gated inside the
+    train scan and equal the stepwise loop's post-round evals round for
+    round — mid-run rounds included, not just the final one."""
+    sc = _scenario(policy="ddsra_jax", engine=engine, eval_every=2)
     _, recs_a = _run_stepwise(sc)
     recs_b = Simulation(sc).fused_rounds()
-    assert recs_b[-1].accuracy is not None
-    assert recs_b[-1].accuracy == pytest.approx(recs_a[-1].accuracy,
-                                                abs=1e-6)
-    # intermediate eval rounds stay un-evaluated in the fused stream
-    assert all(r.accuracy is None for r in recs_b[:-1])
+    # the stepwise schedule: rounds where (t+1) % eval_every == 0, plus
+    # the final round
+    assert [r.t for r in recs_b if r.accuracy is not None] == [1, 3, 4]
+    _assert_accuracy_parity(recs_a, recs_b)
+
+
+@pytest.mark.parametrize("engine", ["cohort", "sharded"])
+@pytest.mark.parametrize("policy", ["ddsra_jax", "delay_driven"])
+def test_fused_matches_stepwise_traced_data_plane(engine, policy):
+    """The traced data plane: counter-based jax batch draws gathered from
+    device-resident stacks *inside* the train scan reproduce the stepwise
+    loop (whose host oracle, ``sample_cohort_batch_traced``, derives the
+    identical indices eagerly) — bit-identical queues/RNG, params at 1e-5,
+    and identical in-scan accuracy snapshots."""
+    sc = _scenario(engine=engine, policy=policy, data_plane="traced",
+                   eval_every=2)
+    sim_a, recs_a = _run_stepwise(sc)
+    sim_b = Simulation(sc)
+    recs_b = sim_b.fused_rounds()
+    _assert_record_parity(recs_a, recs_b)
+    _assert_accuracy_parity(recs_a, recs_b)
+    _assert_end_state_parity(sim_a, sim_b)
+
+
+def test_traced_plane_refused_off_cohort_engines():
+    with pytest.raises(ValueError, match="data_plane"):
+        Simulation(_scenario(engine="sequential", data_plane="traced"))
+
+
+def test_traced_draws_byte_identical_to_resident_stack_gather():
+    """The host oracle (``sample_cohort_batch_traced``) and the fused
+    scan's in-program gather read the SAME bytes: every occupied slot's
+    valid rows equal a direct gather of ``traced_batch_indices`` into the
+    device-resident stacks, and a wider slot's draw extends a narrower
+    one's (the prefix property the tiered widths rely on)."""
+    from repro.fl.data import (device_resident_stacks,
+                               sample_cohort_batch_traced,
+                               traced_batch_indices)
+    sim = Simulation(_scenario(data_plane="traced", tiers=2))
+    layout = sim.engine._layout(sim, sim.cohort_capacity)
+    x_all, y_all, pool = device_resident_stacks(sim.ds)
+    l_max = x_all.shape[1]
+    key = sim.data_key
+    device_ids = list(range(min(sim.cohort_capacity,
+                                sim.net.cfg.n_devices)))
+    for t in (0, 3):
+        batch = sample_cohort_batch_traced(key, t, sim.ds, device_ids,
+                                           sim.d_tilde, layout)
+        for di, n in enumerate(device_ids):
+            k, row = layout.locate(int(batch.slot_of[di]))
+            width = layout.tier_widths[k]
+            b = int(min(sim.d_tilde[n], pool[n]))
+            idx = np.asarray(traced_batch_indices(
+                key, t, n, int(pool[n]), width, l_max))
+            # prefix property: the width-draw's first b indices ARE the
+            # b-draw (so any tier width reads the same b valid rows)
+            idx_b = np.asarray(traced_batch_indices(
+                key, t, n, int(pool[n]), b, l_max))
+            assert np.array_equal(idx[:b], idx_b)
+            assert batch.tiers[k].x[row, :b].tobytes() == \
+                x_all[n][idx[:b]].tobytes()
+            assert batch.tiers[k].y[row, :b].tobytes() == \
+                y_all[n][idx[:b]].tobytes()
+            assert batch.tiers[k].mask[row, :b].all()
+            assert not batch.tiers[k].mask[row, b:].any()
 
 
 def test_fused_and_stepwise_blocks_interleave():
@@ -202,6 +273,28 @@ def test_sweep_is_one_compile_across_value_changes(compile_count):
     assert res.taus.shape == (2, 2, 4)
 
 
+_POLICIES = ["ddsra_jax", "round_robin", "random", "delay_driven"]
+
+
+def test_multi_policy_sweep_is_one_program(compile_count):
+    """The whole policies x seeds x V grid is ONE compiled program — not
+    one per policy — and changing values (seeds, V) never retraces."""
+    sim = Simulation(_scenario(policy="ddsra_jax"))
+    sim.sweep([0.01, 1.0], seeds=[0, 1], rounds=4, policies=_POLICIES)
+    with compile_count((policy_sweep.TRACE_COUNTS, "sweep")) as c:
+        res = sim.sweep([0.5, 50.0], seeds=[3, 9], rounds=4,
+                        policies=_POLICIES)
+    assert c.count == 0
+    assert res.taus.shape == (4, 2, 2, 4)
+    assert res.policies == _POLICIES
+
+
+def test_multi_policy_sweep_refuses_host_policies():
+    sim = Simulation(_scenario(policy="ddsra_jax"))
+    with pytest.raises(ValueError, match="loss_driven"):
+        sim.sweep([0.01], rounds=2, policies=["ddsra_jax", "loss_driven"])
+
+
 # ---------------------------------------------------------------------------
 # seeds x V sweep determinism
 # ---------------------------------------------------------------------------
@@ -235,6 +328,39 @@ def test_sweep_matches_stepwise_rows():
                 np.asarray([r.queues for r in recs]), atol=1e-12)
 
 
+def test_multi_policy_sweep_matches_stepwise_rows():
+    """Every (policy, seed, v) lane of the one-program grid equals the
+    stepwise ``reset(seed)`` run of that policy at that V, row for row:
+    realized delays, participation, and bit-exact queue recursions —
+    including the delay_driven lane, whose greedy pick is computed
+    in-scan from the round's channel draws."""
+    sc = _scenario(policy="ddsra_jax")
+    sim = Simulation(sc)
+    res = sim.sweep([0.01, 10.0], seeds=[0, 7], rounds=4,
+                    policies=_POLICIES)
+    for pi, pol in enumerate(_POLICIES):
+        for si, seed in enumerate(res.seeds):
+            for vi, v in enumerate(res.v_values):
+                ref = Simulation(dataclasses.replace(
+                    sc, v=v, rounds=4, policy=pol))
+                ref.reset(seed)
+                recs = list(ref.rounds())
+                np.testing.assert_allclose(
+                    res.taus[pi, si, vi], [r.delay for r in recs],
+                    rtol=1e-9, err_msg=f"{pol} seed={seed} v={v}")
+                assert np.array_equal(
+                    res.selected[pi, si, vi],
+                    np.asarray([r.selected for r in recs])), (pol, seed, v)
+                np.testing.assert_allclose(
+                    res.queues[pi, si, vi],
+                    np.asarray([r.queues for r in recs]), atol=1e-12,
+                    err_msg=f"{pol} seed={seed} v={v}")
+    # fixed-resource lanes never read V: identical rows across the V axis
+    for pi, pol in enumerate(_POLICIES):
+        if pol != "ddsra_jax":
+            assert np.array_equal(res.taus[pi, :, 0], res.taus[pi, :, 1])
+
+
 _SWEEP_SCRIPT = textwrap.dedent("""
     import hashlib, numpy as np
     from repro.core.network import NetworkConfig
@@ -242,22 +368,29 @@ _SWEEP_SCRIPT = textwrap.dedent("""
     sc = Scenario(model="mlp", alpha=0.2, max_dataset=120, rounds=5,
                   k_iters=2, eval_every=100, policy="ddsra_jax",
                   net=NetworkConfig(3, 9, 2))
-    res = Simulation(sc).sweep([0.01, 10.0], seeds=[0, 7], rounds=4)
-    h = hashlib.sha256()
-    for a in (res.taus, res.selected, res.queues):
-        h.update(np.ascontiguousarray(a).tobytes())
-    print(h.hexdigest())
+    sim = Simulation(sc)
+    for pols in (None, ["ddsra_jax", "round_robin", "random",
+                        "delay_driven"]):
+        res = sim.sweep([0.01, 10.0], seeds=[0, 7], rounds=4,
+                        policies=pols)
+        h = hashlib.sha256()
+        for a in (res.taus, res.selected, res.queues):
+            h.update(np.ascontiguousarray(a).tobytes())
+        print(h.hexdigest())
 """)
 
 
 def test_sweep_deterministic_across_processes():
-    """The same sweep in a fresh interpreter produces byte-identical
-    trajectories (no hash seeds, no device-order dependence)."""
+    """The same sweeps — the classic seeds x V grid and the multi-policy
+    grid — in a fresh interpreter produce byte-identical trajectories
+    (no hash seeds, no device-order dependence)."""
     sim = Simulation(_scenario(policy="ddsra_jax"))
     local = _sweep_digest(sim.sweep([0.01, 10.0], seeds=[0, 7], rounds=4))
+    local_mp = _sweep_digest(sim.sweep([0.01, 10.0], seeds=[0, 7], rounds=4,
+                                       policies=_POLICIES))
     out = subprocess.run([sys.executable, "-c", _SWEEP_SCRIPT],
                          capture_output=True, text=True, check=True)
-    assert out.stdout.strip() == local
+    assert out.stdout.strip().splitlines() == [local, local_mp]
 
 
 # ---------------------------------------------------------------------------

@@ -210,6 +210,35 @@ def test_training_jaxpr_routes_through_flash_attention():
     assert "gqa_attention" in grad_jaxpr.pretty_print(use_color=False)
 
 
+def test_training_jaxpr_routes_through_ssd_scan():
+    """Under the Pallas backend the SSM family's SSD recurrence must route
+    through the ssd_scan custom-vjp op layer (not the jnp chunked fallback)
+    — and stay differentiable: the backward recomputes via the sequential
+    oracle, so jax.grad works where the bare pallas_call would raise."""
+    from repro.models import backend
+
+    model = sm.SeqSplitModel(sm.FL_SSM, seq_len=8)
+    params = model.init(jax.random.PRNGKey(0))
+    x, y = _token_batch(model)
+    with backend.use_pallas(interpret=True):
+        fwd_jaxpr = jax.make_jaxpr(lambda p: model.forward(p, x))(params)
+        assert any(n.startswith("custom_vjp_call")
+                   for n in _primitive_names(fwd_jaxpr.jaxpr))
+        grad_jaxpr = jax.make_jaxpr(
+            jax.grad(lambda p: model.loss(model.forward(p, x), y)))(params)
+        grad_txt = grad_jaxpr.pretty_print(use_color=False)
+        # the training gradient keeps the recurrence inside the named op
+        # wrapper, and its forward is the Pallas kernel (not the jnp ref)
+        assert "name=ssd" in grad_txt
+        assert "pallas_call" in grad_txt
+        # the routed grad is the chunked fallback's grad (kernel parity)
+        g_kernel = jax.grad(
+            lambda p: model.loss(model.forward(p, x), y))(params)
+    g_ref = jax.grad(lambda p: model.loss(model.forward(p, x), y))(params)
+    for a, b in zip(jax.tree.leaves(g_kernel), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # token data plane: the Markov dataset + cohort packing
 # ---------------------------------------------------------------------------
